@@ -1,0 +1,29 @@
+"""Paper Tables 1-2 analogue: execution-platform + workload configuration.
+
+Paper Table 1 compared cluster vs cloud hardware; our two environments
+are the reserved pod vs burst pod (TPU v5e both, heterogeneity expressed
+as the correction factor K).  Paper Table 2 lists the FWI run geometry,
+which we reproduce exactly (600x600 grid, 4 shots)."""
+from __future__ import annotations
+
+from repro.fwi.solver import FWIConfig
+from repro.launch.hw import TPU_V5E
+
+
+def run() -> list[str]:
+    cfg = FWIConfig()
+    hw = TPU_V5E
+    return [
+        f"envs.chip,0,{hw.name}",
+        f"envs.peak_tflops_bf16,0,{hw.peak_flops_bf16 / 1e12:.0f}",
+        f"envs.hbm_gb_per_s,0,{hw.hbm_bw / 1e9:.0f}",
+        f"envs.hbm_gib,0,{hw.hbm_bytes / 2 ** 30:.0f}",
+        f"envs.ici_gb_per_s_link,0,{hw.ici_link_bw / 1e9:.0f}",
+        f"envs.dci_gb_per_s,0,{hw.dci_bw / 1e9:.2f}",
+        "envs.pod_shape,0,16x16",
+        "envs.multi_pod_shape,0,2x16x16",
+        f"envs.fwi_grid,0,{cfg.nz}x{cfg.nx}",
+        f"envs.fwi_timesteps,0,{cfg.timesteps}",
+        f"envs.fwi_shots,0,{cfg.n_shots}",
+        f"envs.fwi_dt_s,0,{cfg.dt}",
+    ]

@@ -1,0 +1,36 @@
+"""Paper Fig. 5 / eq. 8: execution time vs domain width γ (linear model).
+
+REAL wall-clock measurements on this host: the FWI solver is timed over a
+sweep of domain widths with height fixed (the paper's simplification),
+then t = a·γ + b is fitted and the inverse g(t) = (t-b)/a is what the
+planner uses to size the split."""
+from __future__ import annotations
+
+import time
+
+from repro.fwi.calibrate import measure_gamma_sweep
+from repro.core.gamma import GammaModel
+from repro.fwi.solver import FWIConfig
+
+
+def run() -> list[str]:
+    base = FWIConfig(nz=512, nx=2048, timesteps=20, n_shots=1,
+                     sponge_width=16)
+    widths = [256, 512, 1024, 1536, 2048]
+    t0 = time.perf_counter()
+    g, t = measure_gamma_sweep(base, widths, steps=10, repeats=2)
+    model = GammaModel.fit(g, t, "fwi-width")
+    dt_us = (time.perf_counter() - t0) * 1e6
+    r2 = model.r2(g, t)
+    rows = [
+        f"gamma_fit.a_seconds_per_column,{dt_us:.0f},{model.a:.3e}",
+        f"gamma_fit.b_offset_seconds,{dt_us:.0f},{model.b:.3e}",
+        f"gamma_fit.r2,{dt_us:.0f},{r2:.5f}",
+    ]
+    for gi, ti in zip(g, t):
+        rows.append(f"gamma_fit.width_{gi},{ti * 1e6:.0f},{ti:.6f}")
+    # inverse-property check at the largest width
+    g_back = model.gamma_for(model.time_for(widths[-1]))
+    rows.append(f"gamma_fit.inverse_check,{dt_us:.0f},"
+                f"{abs(g_back - widths[-1])}")
+    return rows

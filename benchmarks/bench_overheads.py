@@ -1,0 +1,68 @@
+"""Paper §3.3 overhead measurements: halo message size (the 21 KB claim),
+monitor/planner per-step cost, checkpoint save/restore wall time."""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import (
+    BurstPlanner,
+    DeadlinePredictor,
+    LogCapacityModel,
+    StepTimeMonitor,
+)
+from repro.fwi.domain import halo_bytes_per_step
+from repro.fwi.solver import FWIConfig
+
+
+def run() -> list[str]:
+    rows = []
+    cfg = FWIConfig()  # paper Table 2 geometry: 600 x 600, 4 shots
+    hb = halo_bytes_per_step(cfg, 4)
+    rows.append(f"overheads.halo_bytes_per_seam_step,0,{hb}")
+    rows.append(f"overheads.halo_kb_per_seam_step,0,{hb / 1024:.1f}")
+    rows.append("overheads.paper_claim_kb,0,21")
+
+    # monitor + planner per-step cost
+    mon = StepTimeMonitor()
+    pred = DeadlinePredictor(1000.0)
+    chips = [16, 32, 64, 128, 256]
+    m = LogCapacityModel.fit(chips, [2000.0 / c for c in chips])
+    planner = BurstPlanner(cluster_model=m, cloud_model=m,
+                           chips_cluster=256, legal_slices=chips)
+    for i in range(64):
+        mon.observe(1.0 + 0.01 * i)
+    n = 2000
+    t0 = time.perf_counter()
+    for i in range(n):
+        mon.observe(1.0)
+        est = pred.estimate(mon, i, 10 * n, float(i))
+        planner.plan(est, i, 10 * n, observed_step_s=1.0,
+                     effective_chips=256)
+    per_call_us = (time.perf_counter() - t0) / n * 1e6
+    rows.append(f"overheads.monitor_plus_planner,{per_call_us:.2f},"
+                f"{per_call_us:.2f}")
+
+    # checkpoint save/restore (64 MB state)
+    state = {"p": jnp.asarray(np.random.default_rng(0)
+                              .standard_normal((4, 1024, 2048))
+                              .astype(np.float32))}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        t0 = time.perf_counter()
+        mgr.save(1, state)
+        t_save = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        mgr.restore(
+            {"p": jnp.zeros((4, 1024, 2048), jnp.float32)}, step=1
+        )
+        t_restore = time.perf_counter() - t0
+    rows.append(f"overheads.ckpt_save_64mb_s,{t_save * 1e6:.0f},"
+                f"{t_save:.3f}")
+    rows.append(f"overheads.ckpt_restore_64mb_s,{t_restore * 1e6:.0f},"
+                f"{t_restore:.3f}")
+    return rows

@@ -1,0 +1,45 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*/<arch>/<shape>.json produced by
+repro.launch.dryrun and emits one row per cell plus aggregates.  Run the
+dry-run first: `python -m repro.launch.dryrun --all`."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run() -> list[str]:
+    rows = []
+    cells = sorted(ARTIFACTS.glob("*/*/*.json"))
+    if not cells:
+        return ["roofline.no_artifacts_run_dryrun_first,0,0"]
+    n_ok = n_skip = n_err = 0
+    worst = (2.0, None)
+    for p in cells:
+        r = json.loads(p.read_text())
+        tag = f"{r['mesh']}.{r['arch']}.{r['shape']}"
+        if r["status"] == "skipped":
+            n_skip += 1
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            rows.append(f"roofline.{tag}.ERROR,0,1")
+            continue
+        n_ok += 1
+        rl = r["roofline"]
+        us = rl["step_time_lower_bound_s"] * 1e6
+        rows.append(f"roofline.{tag}.frac,{us:.0f},"
+                    f"{rl['roofline_fraction']:.4f}")
+        rows.append(f"roofline.{tag}.dominant,{us:.0f},{rl['dominant']}")
+        if r["mesh"] == "single" and rl["roofline_fraction"] < worst[0] \
+                and r["shape"] == "train_4k":
+            worst = (rl["roofline_fraction"], tag)
+    rows.append(f"roofline.cells_ok,0,{n_ok}")
+    rows.append(f"roofline.cells_skipped_by_design,0,{n_skip}")
+    rows.append(f"roofline.cells_error,0,{n_err}")
+    if worst[1]:
+        rows.append(f"roofline.worst_train_cell,0,{worst[1]}")
+    return rows

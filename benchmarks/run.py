@@ -1,0 +1,57 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_capacity_fit    — Fig. 4 / eqs. 6-7 (time-vs-cores log fits)
+  bench_gamma_fit       — Fig. 5 / eq. 8 (time-vs-γ linear fit, REAL timing)
+  bench_burst_deadline  — §3.3 core claim (static misses, adaptive meets)
+  bench_overheads       — §3.3 message-size/monitor/checkpoint overheads
+  bench_envs            — Tables 1-2 (platform + workload configuration)
+  bench_kernels         — Pallas kernel µbenches (interpret mode)
+  bench_roofline        — EXPERIMENTS §Roofline from dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks import (  # noqa: E402
+    bench_burst_deadline,
+    bench_capacity_fit,
+    bench_envs,
+    bench_gamma_fit,
+    bench_kernels,
+    bench_overheads,
+    bench_roofline,
+)
+
+BENCHES = [
+    ("envs", bench_envs),
+    ("capacity_fit", bench_capacity_fit),
+    ("gamma_fit", bench_gamma_fit),
+    ("burst_deadline", bench_burst_deadline),
+    ("overheads", bench_overheads),
+    ("kernels", bench_kernels),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in BENCHES:
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as e:  # keep the harness going
+            failures += 1
+            print(f"{name}.FAILED,0,{e!r}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

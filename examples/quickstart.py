@@ -1,0 +1,33 @@
+"""Quickstart: train a reduced-config LM for a few steps with the
+deadline monitor, checkpoint it, resume, then serve it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import serve, train  # noqa: E402
+
+with tempfile.TemporaryDirectory() as ckpt:
+    print("=== train 30 steps with a deadline monitor ===")
+    train.main([
+        "--arch", "yi-6b", "--smoke", "--steps", "30",
+        "--batch", "4", "--seq", "64", "--deadline", "120",
+        "--ckpt-dir", ckpt, "--ckpt-every", "10",
+    ])
+    print("=== resume from the checkpoint for 10 more ===")
+    train.main([
+        "--arch", "yi-6b", "--smoke", "--steps", "40",
+        "--batch", "4", "--seq", "64",
+        "--ckpt-dir", ckpt, "--resume",
+    ])
+
+print("=== batched serving (prefill + decode) ===")
+serve.main([
+    "--arch", "yi-6b", "--smoke", "--batch", "2",
+    "--prompt-len", "16", "--gen", "8",
+])
+print("quickstart OK")

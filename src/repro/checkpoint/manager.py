@@ -1,0 +1,206 @@
+"""Checkpointing: async, atomic, reshard-on-restore.
+
+This is the paper's Fig.1 step 2 ("save current state") and steps 5-7
+(move + assimilate + restart): a checkpoint written under one mesh can be
+restored under a *different* mesh/sharding — jax.device_put with the new
+NamedSharding performs the redistribution, which IS the burst's state
+movement on real hardware.
+
+Layout: <dir>/step_<n>/
+          manifest.json        {step, leaf paths, shapes, dtypes, extra}
+          <leaf_key>.npy       one array per pytree leaf
+Writes go to step_<n>.tmp and are atomically renamed; a torn write is
+never visible.  Async mode pushes the host-side serialization to a
+daemon thread (off the training critical path); save(wait=True) or
+close() joins it.  A SIGTERM handler can be installed for preemption-
+triggered snapshots (install_preemption_hook).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import signal
+import threading
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+_SEP = "__"
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path) or "root"
+        out[key] = leaf
+    return out
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    return str(entry)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | os.PathLike, *, async_save: bool = True,
+                 keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._q: queue.Queue = queue.Queue()
+        self._worker: threading.Thread | None = None
+        self._pending = 0
+        self._lock = threading.Lock()
+        if async_save:
+            self._worker = threading.Thread(target=self._run, daemon=True)
+            self._worker.start()
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, step: int, state, extra: dict | None = None,
+             wait: bool = False):
+        """Snapshot `state` (pytree of arrays) at `step`.
+
+        Device arrays are fetched to host here (cheap vs serialization);
+        file I/O happens on the worker thread in async mode.
+        """
+        host = {
+            k: np.asarray(v) for k, v in _flatten(state).items()
+        }
+        job = (step, host, dict(extra or {}))
+        if self.async_save and not wait:
+            with self._lock:
+                self._pending += 1
+            self._q.put(job)
+        else:
+            self._write(job)
+
+    def wait(self):
+        if self.async_save:
+            self._q.join()
+
+    def close(self):
+        self.wait()
+
+    def _run(self):
+        while True:
+            job = self._q.get()
+            try:
+                self._write(job)
+            finally:
+                with self._lock:
+                    self._pending -= 1
+                self._q.task_done()
+
+    def _write(self, job):
+        step, host, extra = job
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "extra": extra, "leaves": {}}
+        for key, arr in host.items():
+            fname = f"{key}.npy"
+            true_dtype = str(arr.dtype)
+            if arr.dtype.kind not in "biufc":
+                # ml_dtypes (bfloat16, float8_*): persist as raw bytes
+                stored = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+            else:
+                stored = arr
+            np.save(tmp / fname, stored, allow_pickle=False)
+            manifest["leaves"][key] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": true_dtype,
+            }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target_state, step: int | None = None,
+                shardings=None) -> tuple[Any, dict]:
+        """Load into the structure of `target_state` (pytree of arrays or
+        ShapeDtypeStructs).  `shardings` (matching pytree) redistributes
+        each leaf onto the *current* mesh — restoring under a different
+        mesh than the save is the supported path (that is the burst).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat_target = _flatten(target_state)
+        flat_shardings = _flatten(shardings) if shardings is not None else {}
+        out = {}
+        for key, meta in manifest["leaves"].items():
+            if key not in flat_target:
+                continue
+            arr = np.load(d / meta["file"], allow_pickle=False)
+            if str(arr.dtype) != meta["dtype"]:
+                arr = arr.view(jax.numpy.dtype(meta["dtype"]))
+            sh = flat_shardings.get(key)
+            out[key] = (
+                jax.device_put(arr, sh) if sh is not None
+                else jax.numpy.asarray(arr)
+            )
+        missing = set(flat_target) - set(out)
+        if missing:
+            raise KeyError(f"checkpoint at step {step} missing leaves: "
+                           f"{sorted(missing)[:5]}...")
+        # rebuild the pytree in target structure
+        leaves_order, treedef = jax.tree_util.tree_flatten_with_path(
+            target_state
+        )
+        vals = []
+        for path, _ in leaves_order:
+            key = _SEP.join(_path_str(p) for p in path) or "root"
+            vals.append(out[key])
+        return (
+            jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(target_state), vals
+            ),
+            manifest["extra"],
+        )
+
+
+def install_preemption_hook(save_fn: Callable[[], None]):
+    """SIGTERM -> best-effort snapshot before the platform reclaims us."""
+
+    def handler(signum, frame):
+        try:
+            save_fn()
+        finally:
+            signal.default_int_handler(signum, frame)
+
+    signal.signal(signal.SIGTERM, handler)

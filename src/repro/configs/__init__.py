@@ -1,0 +1,46 @@
+"""Architecture registry — one module per assigned arch (+ the paper's FWI).
+
+``get_config("<id>")`` resolves any of the ten assigned architectures;
+``smoke_config(cfg)`` shrinks one for CPU tests.
+"""
+from repro.configs.base import REGISTRY, ModelConfig, RunConfig, get_config, register
+from repro.configs.granite_8b import GRANITE_8B
+from repro.configs.yi_6b import YI_6B
+from repro.configs.yi_9b import YI_9B
+from repro.configs.minitron_8b import MINITRON_8B
+from repro.configs.deepseek_v3_671b import DEEPSEEK_V3_671B
+from repro.configs.deepseek_v2_236b import DEEPSEEK_V2_236B
+from repro.configs.qwen2_vl_72b import QWEN2_VL_72B
+from repro.configs.whisper_large_v3 import WHISPER_LARGE_V3
+from repro.configs.mamba2_370m import MAMBA2_370M
+from repro.configs.jamba_v0_1_52b import JAMBA_V01_52B
+from repro.configs.smoke import smoke_config
+from repro.configs.shapes import SHAPES, SMOKE_SHAPES, ShapeConfig, cell_is_runnable, input_specs
+
+ALL_ARCHS = [
+    "granite-8b",
+    "yi-6b",
+    "yi-9b",
+    "minitron-8b",
+    "deepseek-v3-671b",
+    "deepseek-v2-236b",
+    "qwen2-vl-72b",
+    "whisper-large-v3",
+    "mamba2-370m",
+    "jamba-v0.1-52b",
+]
+
+__all__ = [
+    "ALL_ARCHS",
+    "ModelConfig",
+    "RunConfig",
+    "REGISTRY",
+    "SHAPES",
+    "SMOKE_SHAPES",
+    "ShapeConfig",
+    "cell_is_runnable",
+    "get_config",
+    "input_specs",
+    "register",
+    "smoke_config",
+]

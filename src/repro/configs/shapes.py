@@ -1,0 +1,115 @@
+"""Input-shape cells (assigned) + ShapeDtypeStruct input builders.
+
+Four shapes per LM arch:
+  train_4k     seq 4096   global_batch 256   -> train_step
+  prefill_32k  seq 32768  global_batch 32    -> prefill_step
+  decode_32k   seq 32768  global_batch 128   -> decode_step (1 new token)
+  long_500k    seq 524288 global_batch 1     -> decode_step (sub-quadratic only)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+# Smoke-scale variants of the same programs (CPU tests).
+SMOKE_SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 64, 4),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 64, 2),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 64, 4),
+    "long_500k": ShapeConfig("long_500k", "decode", 128, 1),
+}
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """long_500k only runs for sub-quadratic (SSM/hybrid) archs."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, (
+            "skipped: pure full-attention arch has no sub-quadratic path "
+            "(DESIGN.md §Arch-applicability)"
+        )
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every non-param model input.
+
+    Weak-type-correct, shardable, no device allocation.  The KV/SSM cache
+    specs for decode come from the model (models.model.cache_abstract).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    specs: dict = {}
+    if shape.kind == "train":
+        if cfg.input_mode == "embeds":
+            specs["embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+            specs["tokens"] = sds((B, S), jnp.int32)  # labels source
+        else:
+            specs["tokens"] = sds((B, S), jnp.int32)
+        specs["loss_mask"] = sds((B, S), jnp.float32)
+        if cfg.rope_type == "mrope":
+            specs["positions"] = sds((B, 3, S), jnp.int32)
+        if cfg.cross_attention:
+            specs["enc_embeds"] = sds(
+                (B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16
+            )
+    elif shape.kind == "prefill":
+        if cfg.input_mode == "embeds":
+            specs["embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+        else:
+            specs["tokens"] = sds((B, S), jnp.int32)
+        if cfg.rope_type == "mrope":
+            specs["positions"] = sds((B, 3, S), jnp.int32)
+        if cfg.cross_attention:
+            specs["enc_embeds"] = sds(
+                (B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16
+            )
+    elif shape.kind == "decode":
+        specs["token"] = sds((B,), jnp.int32)
+        specs["pos"] = sds((), jnp.int32)
+        if cfg.rope_type == "mrope":
+            specs["positions"] = sds((B, 3), jnp.int32)
+    else:
+        raise ValueError(shape.kind)
+    return specs
+
+
+def tokens_like(spec_tree, key=None):
+    """Materialize concrete inputs matching input_specs (smoke tests)."""
+    key = key if key is not None else jax.random.key(0)
+
+    def mk(s):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            if s.shape == ():
+                return jnp.asarray(3, s.dtype)
+            return jax.random.randint(sub, s.shape, 0, 17).astype(s.dtype)
+        return jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype)
+
+    out = {}
+    for k, v in spec_tree.items():
+        if k == "loss_mask":
+            out[k] = jnp.ones(v.shape, v.dtype)
+        else:
+            out[k] = mk(v)
+    return out

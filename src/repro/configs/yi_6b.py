@@ -1,0 +1,20 @@
+"""01.AI Yi-6B — llama-arch dense GQA kv=4 [arXiv:2403.04652; hf]."""
+from repro.configs.base import ModelConfig, dense_blocks, register
+
+YI_6B = register(ModelConfig(
+    name="yi-6b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=64000,
+    blocks=dense_blocks(32),
+    rope_theta=5_000_000.0,
+    param_dtype="float32",
+    optimizer="adamw",
+    remat="full",
+    source="arXiv:2403.04652 (Yi); hf 01-ai/Yi-6B",
+))

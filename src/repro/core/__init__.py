@@ -1,0 +1,54 @@
+# The paper's primary contribution: self-adaptive deadline-driven
+# auto-scaling (cloud bursting) — monitoring, capacity models (eqs 1-3,
+# 6-7), γ domain split (eqs 4-5, 8), burst planning (Fig. 1) and the
+# elastic orchestrator that executes it on TPU multi-pod meshes.
+from repro.core.allocator import (
+    HeterogeneousPlan,
+    PodShare,
+    conservation_ok,
+    heterogeneous_split,
+)
+from repro.core.capacity import (
+    LogCapacityModel,
+    ThroughputModel,
+    burst_cores,
+    correction_factor,
+    round_to_legal_slice,
+)
+from repro.core.deadline import DeadlineEstimate, DeadlinePredictor
+from repro.core.gamma import GammaModel, split_gamma
+from repro.core.monitor import StepTimeMonitor
+from repro.core.orchestrator import (
+    BurstDecision,
+    ElasticOrchestrator,
+    PodFailure,
+    PodSpec,
+    Resources,
+    RunRecord,
+)
+from repro.core.planner import BurstPlanner, OverheadModel
+
+__all__ = [
+    "BurstDecision",
+    "BurstPlanner",
+    "DeadlineEstimate",
+    "DeadlinePredictor",
+    "ElasticOrchestrator",
+    "GammaModel",
+    "HeterogeneousPlan",
+    "LogCapacityModel",
+    "OverheadModel",
+    "PodFailure",
+    "PodShare",
+    "PodSpec",
+    "Resources",
+    "RunRecord",
+    "StepTimeMonitor",
+    "ThroughputModel",
+    "burst_cores",
+    "conservation_ok",
+    "correction_factor",
+    "heterogeneous_split",
+    "round_to_legal_slice",
+    "split_gamma",
+]

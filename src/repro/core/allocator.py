@@ -1,0 +1,95 @@
+"""Heterogeneous work allocator — the γ split realized for SPMD.
+
+The paper assigns unequal domain shares to unequal environments.  SPMD
+requires a uniform per-device program, so unequal shares are realized as
+*unequal microbatch counts with padding + loss masking*: every pod runs
+the same number of µ-steps (the max), but pods with a smaller share get
+zero-masked filler microbatches.  Work conservation holds exactly: the
+sum of unmasked tokens equals the global batch.
+
+The striped/greedy second-level placement of the paper (§3.3) maps to
+device order inside the mesh: a pod's microbatches are contiguous on its
+"data" axis, so only the gradient reduction crosses the pod boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PodShare:
+    pod: int
+    microbatches: int            # real (unmasked) microbatches
+    padded_microbatches: int     # uniform count run by every pod
+    tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class HeterogeneousPlan:
+    shares: tuple[PodShare, ...]
+    microbatch_size: int
+    seq_len: int
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(s.tokens for s in self.shares)
+
+    def mask_for(self, pod: int) -> np.ndarray:
+        """(padded_microbatches,) 0/1 mask of real µ-batches for a pod."""
+        sh = self.shares[pod]
+        m = np.zeros(sh.padded_microbatches, np.float32)
+        m[: sh.microbatches] = 1.0
+        return m
+
+
+def heterogeneous_split(
+    *,
+    global_batch: int,
+    microbatch: int,
+    seq_len: int,
+    throughputs: Sequence[float],
+) -> HeterogeneousPlan:
+    """Split `global_batch` into per-pod microbatch counts ∝ throughput.
+
+    throughputs: relative tokens/sec of each pod (the paper's 1/K for the
+    cloud pod).  Total microbatches are preserved exactly; rounding
+    residue goes to the fastest pod.
+    """
+    assert global_batch % microbatch == 0, (global_batch, microbatch)
+    n_mb = global_batch // microbatch
+    total_tp = sum(throughputs)
+    raw = [n_mb * tp / total_tp for tp in throughputs]
+    counts = [int(math.floor(r)) for r in raw]
+    # distribute the remainder by largest fractional part, ties → fastest
+    residue = n_mb - sum(counts)
+    order = sorted(
+        range(len(raw)),
+        key=lambda i: (raw[i] - counts[i], throughputs[i]),
+        reverse=True,
+    )
+    for i in range(residue):
+        counts[order[i % len(order)]] += 1
+    padded = max(counts) if counts else 0
+    shares = tuple(
+        PodShare(
+            pod=i,
+            microbatches=c,
+            padded_microbatches=padded,
+            tokens=c * microbatch * seq_len,
+        )
+        for i, c in enumerate(counts)
+    )
+    return HeterogeneousPlan(
+        shares=shares, microbatch_size=microbatch, seq_len=seq_len
+    )
+
+
+def conservation_ok(plan: HeterogeneousPlan, global_batch: int) -> bool:
+    return (
+        sum(s.microbatches for s in plan.shares) * plan.microbatch_size
+        == global_batch
+    )

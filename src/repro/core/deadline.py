@@ -1,0 +1,54 @@
+"""Deadline predictor — paper §2 step 1.
+
+Extrapolates total completion time from the monitored per-step estimate
+and compares against the (dynamically changeable) deadline.  The paper
+notes the deadline "could also change dynamically" — set_deadline() may
+be called at any time and the next check uses the new value.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.monitor import StepTimeMonitor
+
+
+@dataclasses.dataclass
+class DeadlineEstimate:
+    estimated_total_s: float
+    elapsed_s: float
+    remaining_s: float
+    deadline_s: float
+    slack_s: float
+    will_miss: bool
+    predictable: bool
+
+
+class DeadlinePredictor:
+    def __init__(self, deadline_s: float, margin_frac: float = 0.05):
+        self.deadline_s = deadline_s
+        self.margin_frac = margin_frac
+
+    def set_deadline(self, deadline_s: float):
+        self.deadline_s = deadline_s
+
+    def estimate(
+        self,
+        monitor: StepTimeMonitor,
+        steps_done: int,
+        steps_total: int,
+        elapsed_s: float,
+    ) -> DeadlineEstimate:
+        t_step = monitor.step_time()
+        remaining = max(steps_total - steps_done, 0) * t_step
+        total = elapsed_s + remaining
+        margin = self.margin_frac * self.deadline_s
+        will_miss = total > self.deadline_s - margin
+        return DeadlineEstimate(
+            estimated_total_s=total,
+            elapsed_s=elapsed_s,
+            remaining_s=remaining,
+            deadline_s=self.deadline_s,
+            slack_s=self.deadline_s - total,
+            will_miss=will_miss and monitor.predictable(),
+            predictable=monitor.predictable(),
+        )

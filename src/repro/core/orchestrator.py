@@ -1,0 +1,240 @@
+"""Elastic orchestrator — paper Fig. 1, steps 2-8 as a state machine.
+
+    MONITOR -> DECIDE -> CHECKPOINT -> REMESH -> RESHARD -> RESUME
+
+The orchestrator owns the loop; the workload is behind a small Session
+protocol so the same machinery drives (a) the simulated hybrid cluster
+used by the paper-reproduction benchmarks and (b) the real JAX training
+session in launch/train.py (where REMESH = jax.make_mesh over the grown
+device set and RESHARD = checkpoint restore under the new shardings).
+
+Fault tolerance beyond the paper: periodic checkpoints, failure events
+trigger a shrink-and-restart from the last checkpoint, sustained
+straggling triggers a γ rebalance using freshly measured throughputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Protocol
+
+from repro.core.allocator import HeterogeneousPlan, heterogeneous_split
+from repro.core.deadline import DeadlinePredictor
+from repro.core.monitor import StepTimeMonitor
+from repro.core.planner import BurstDecision, BurstPlanner
+
+
+@dataclasses.dataclass
+class PodSpec:
+    chips: int
+    slowdown: float = 1.0            # paper's K for this environment
+    name: str = "pod"
+
+
+@dataclasses.dataclass
+class Resources:
+    pods: list[PodSpec]
+    shares: list[float]              # work share per pod (sums to 1)
+
+    @property
+    def total_chips(self) -> int:
+        return sum(p.chips for p in self.pods)
+
+
+class Session(Protocol):
+    def run_step(self, step: int) -> float: ...
+    def checkpoint(self, step: int) -> Any: ...
+
+
+class PodFailure(RuntimeError):
+    def __init__(self, pod: int, step: int):
+        super().__init__(f"pod {pod} failed at step {step}")
+        self.pod = pod
+        self.step = step
+
+
+@dataclasses.dataclass
+class OrchestratorEvent:
+    step: int
+    kind: str                        # burst | failure | rebalance | ckpt
+    detail: dict
+
+
+@dataclasses.dataclass
+class RunRecord:
+    completed: bool
+    steps: int
+    elapsed_s: float
+    deadline_s: float
+    met_deadline: bool
+    events: list[OrchestratorEvent]
+    step_times: list[float]
+    final_resources: Resources | None = None
+
+
+SessionFactory = Callable[[Resources, int, Any], Session]
+
+
+class ElasticOrchestrator:
+    def __init__(
+        self,
+        *,
+        planner: BurstPlanner,
+        predictor: DeadlinePredictor,
+        monitor: StepTimeMonitor | None = None,
+        check_every: int = 8,
+        ckpt_every: int = 50,
+        max_bursts: int = 2,
+        rebalance_straggler_rate: float = 0.2,
+    ):
+        self.planner = planner
+        self.predictor = predictor
+        self.monitor = monitor or StepTimeMonitor()
+        self.check_every = check_every
+        self.ckpt_every = ckpt_every
+        self.max_bursts = max_bursts
+        self.rebalance_straggler_rate = rebalance_straggler_rate
+
+    # ---- the γ-split applied to resources --------------------------------
+
+    @staticmethod
+    def apply_burst(res: Resources, decision: BurstDecision) -> Resources:
+        pods = list(res.pods) + [
+            PodSpec(
+                chips=decision.chips_burst,
+                slowdown=max(decision.correction_K, 1e-6),
+                name=f"burst{len(res.pods)}",
+            )
+        ]
+        tps = [p.chips / p.slowdown for p in pods]
+        total = sum(tps)
+        return Resources(pods=pods, shares=[t / total for t in tps])
+
+    @staticmethod
+    def rebalanced(res: Resources, measured_tps: list[float]) -> Resources:
+        total = sum(measured_tps)
+        if total <= 0:
+            return res
+        return Resources(
+            pods=list(res.pods), shares=[t / total for t in measured_tps]
+        )
+
+    def split_plan(self, res: Resources, global_batch: int,
+                   microbatch: int, seq_len: int) -> HeterogeneousPlan:
+        return heterogeneous_split(
+            global_batch=global_batch,
+            microbatch=microbatch,
+            seq_len=seq_len,
+            throughputs=[p.chips / p.slowdown for p in res.pods],
+        )
+
+    # ---- main loop --------------------------------------------------------
+
+    def run(
+        self,
+        *,
+        session_factory: SessionFactory,
+        initial: Resources,
+        steps_total: int,
+        overhead_s_fn: Callable[[BurstDecision], float] | None = None,
+    ) -> RunRecord:
+        res = initial
+        session = session_factory(res, 0, None)
+        elapsed = 0.0
+        events: list[OrchestratorEvent] = []
+        step_times: list[float] = []
+        bursts_done = 0
+        last_ckpt: Any = None
+        last_ckpt_step = -1
+        step = 0
+        while step < steps_total:
+            try:
+                dt = session.run_step(step)
+            except PodFailure as f:
+                # fault tolerance: drop the failed pod, restart from the
+                # last checkpoint (re-running the lost steps)
+                events.append(OrchestratorEvent(
+                    step, "failure", {"pod": f.pod}
+                ))
+                pods = [p for i, p in enumerate(res.pods) if i != f.pod]
+                tps = [p.chips / p.slowdown for p in pods]
+                res = Resources(
+                    pods=pods, shares=[t / sum(tps) for t in tps]
+                )
+                restart = max(last_ckpt_step + 1, 0)
+                elapsed += self.planner.overheads.restart_s
+                session = session_factory(res, restart, last_ckpt)
+                self.monitor.reset_window()
+                step = restart
+                continue
+            self.monitor.observe(dt)
+            elapsed += dt
+            step_times.append(dt)
+            step += 1
+
+            if step % self.ckpt_every == 0:
+                last_ckpt = session.checkpoint(step)
+                last_ckpt_step = step
+                events.append(OrchestratorEvent(step, "ckpt", {}))
+
+            if step % self.check_every or step >= steps_total:
+                continue
+
+            est = self.predictor.estimate(
+                self.monitor, step, steps_total, elapsed
+            )
+            eff_chips = sum(p.chips / p.slowdown for p in res.pods)
+            decision = self.planner.plan(
+                est, step, steps_total,
+                observed_step_s=self.monitor.step_time(),
+                effective_chips=eff_chips,
+            )
+            if decision.burst and bursts_done < self.max_bursts:
+                # Fig.1 steps 2,5: save state, move it to the new nodes
+                last_ckpt = session.checkpoint(step)
+                last_ckpt_step = step
+                overhead = (
+                    overhead_s_fn(decision) if overhead_s_fn
+                    else decision.overhead_s
+                )
+                elapsed += overhead
+                # steps 3,4: expand resources with the γ split
+                res = self.apply_burst(res, decision)
+                # steps 6,7: assimilate state, restart at the stopped step
+                session = session_factory(res, step, last_ckpt)
+                self.monitor.reset_window()
+                bursts_done += 1
+                events.append(OrchestratorEvent(
+                    step, "burst",
+                    {
+                        "chips": decision.chips_burst,
+                        "K": decision.correction_K,
+                        "overhead_s": overhead,
+                        "est_stay": decision.est_time_stay_s,
+                        "est_burst": decision.est_time_burst_s,
+                        "shares": list(res.shares),
+                    },
+                ))
+            elif (
+                self.monitor.straggler_rate() > self.rebalance_straggler_rate
+                and len(res.pods) > 1
+            ):
+                # straggler mitigation: shift γ toward healthy pods using
+                # measured (not nominal) throughput
+                tps = [p.chips / p.slowdown for p in res.pods]
+                res = self.rebalanced(res, tps)
+                session = session_factory(res, step, session.checkpoint(step))
+                events.append(OrchestratorEvent(
+                    step, "rebalance", {"shares": list(res.shares)}
+                ))
+
+        return RunRecord(
+            completed=True,
+            steps=steps_total,
+            elapsed_s=elapsed,
+            deadline_s=self.predictor.deadline_s,
+            met_deadline=elapsed <= self.predictor.deadline_s,
+            events=events,
+            step_times=step_times,
+            final_resources=res,
+        )

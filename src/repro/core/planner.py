@@ -1,0 +1,202 @@
+"""Burst planner — the paper's Fig. 1 decision pipeline, steps 1-4.
+
+Given a deadline-miss prediction, compute (paper §2):
+  step 3: the chip count needed in the elastic environment —
+          solve L_cluster for the remaining-time budget, apply the
+          correction factor K, subtract on-premise capacity (eq. 3),
+          round up to a legal slice shape;
+  step 4: the share of the domain (γ) to place there (eqs. 4-5) —
+          for LM training, γ is the burst pod's share of the global
+          batch, realized by the heterogeneous allocator.
+
+Beyond the paper (its §3.3 names this as future work): the decision
+inequality accounts for the burst overhead explicitly —
+  T_after = T_ckpt + T_provision + T_transfer + T_restart
+            + steps_remaining · t_step(after)
+and bursting is only worth it if T_after < min(T_stay, deadline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core.capacity import (
+    LogCapacityModel,
+    burst_cores,
+    correction_factor,
+    round_to_legal_slice,
+)
+from repro.core.deadline import DeadlineEstimate
+from repro.core.gamma import GammaModel
+
+
+@dataclasses.dataclass(frozen=True)
+class OverheadModel:
+    """Fixed + size-dependent burst overheads (seconds)."""
+
+    ckpt_s: float = 10.0
+    provision_s: float = 90.0           # slice spin-up
+    restart_s: float = 30.0             # re-compile + re-shard + warmup
+    transfer_bytes: float = 0.0         # checkpoint/state moved cross-env
+    transfer_bw: float = 6.25e9         # DCI bytes/s
+
+    def total(self) -> float:
+        xfer = self.transfer_bytes / max(self.transfer_bw, 1.0)
+        return self.ckpt_s + self.provision_s + self.restart_s + xfer
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstDecision:
+    burst: bool
+    reason: str
+    chips_burst: int = 0
+    gamma: int = 0                       # work units moved (µbatches/columns)
+    gamma_total: int = 0
+    est_time_stay_s: float = 0.0
+    est_time_burst_s: float = 0.0
+    overhead_s: float = 0.0
+    correction_K: float = 1.0
+    cores_needed: float = 0.0
+
+
+class BurstPlanner:
+    def __init__(
+        self,
+        *,
+        cluster_model: LogCapacityModel,
+        cloud_model: LogCapacityModel,
+        chips_cluster: int,
+        legal_slices: Sequence[int],
+        overheads: OverheadModel = OverheadModel(),
+        gamma_model: GammaModel | None = None,
+        gamma_total: int = 0,
+        max_burst_chips: int | None = None,
+    ):
+        self.cluster_model = cluster_model
+        self.cloud_model = cloud_model
+        self.chips_cluster = chips_cluster
+        self.legal = list(legal_slices)
+        self.overheads = overheads
+        self.gamma_model = gamma_model
+        self.gamma_total = gamma_total
+        self.max_burst_chips = (
+            max(self.legal) if max_burst_chips is None else max_burst_chips
+        )
+
+    def calibrated_cluster_model(
+        self, observed_step_s: float | None, effective_chips: float | None,
+    ) -> LogCapacityModel:
+        """Online intercept calibration (beyond paper; its §3.3 flags the
+        static fit as a source of inaccuracy): shift B so the model
+        reproduces the *currently observed* step time at the current
+        effective chip count — congestion moves the whole curve up."""
+        if not observed_step_s or not effective_chips:
+            return self.cluster_model
+        predicted = self.cluster_model.predict_time(effective_chips)
+        if predicted <= 0:
+            return self.cluster_model
+        shift = math.log10(max(observed_step_s, 1e-9) / predicted)
+        m = self.cluster_model
+        return LogCapacityModel(A=m.A, B=m.B + shift, name=m.name + "+cal")
+
+    def plan(
+        self,
+        est: DeadlineEstimate,
+        steps_done: int,
+        steps_total: int,
+        *,
+        observed_step_s: float | None = None,
+        effective_chips: float | None = None,
+    ) -> BurstDecision:
+        if not est.predictable:
+            return BurstDecision(False, "step times not yet predictable")
+        if not est.will_miss:
+            return BurstDecision(
+                False, "deadline met on current resources",
+                est_time_stay_s=est.estimated_total_s,
+            )
+        steps_rem = max(steps_total - steps_done, 0)
+        if steps_rem == 0:
+            return BurstDecision(False, "no steps remaining")
+        overhead = self.overheads.total()
+        budget = est.deadline_s - est.elapsed_s - overhead
+        if budget <= 0:
+            return BurstDecision(
+                False,
+                "deadline unreachable even with burst (overhead exceeds "
+                "remaining budget)",
+                est_time_stay_s=est.estimated_total_s,
+                overhead_s=overhead,
+            )
+        cluster_model = self.calibrated_cluster_model(
+            observed_step_s, effective_chips
+        )
+        # --- paper step 3: chips needed -------------------------------
+        # The capacity model is fitted on *per-step* times; scale the
+        # remaining-time budget to a per-step budget.
+        t_step_budget = budget / steps_rem
+        cores_needed = cluster_model.cores_for(t_step_budget)
+        K = correction_factor(
+            self.cloud_model, cluster_model, max(cores_needed, 1.0)
+        )
+        c_n = burst_cores(cores_needed, self.chips_cluster, K)
+        chips = round_to_legal_slice(c_n, self.legal)
+        chips = min(chips, self.max_burst_chips)
+        if chips == 0:
+            return BurstDecision(
+                False, "cluster alone satisfies the adjusted budget",
+                est_time_stay_s=est.estimated_total_s,
+                cores_needed=cores_needed, correction_K=K,
+            )
+        # --- paper step 4: domain split γ ------------------------------
+        # time the on-premise side may spend per step after the split
+        gamma = 0
+        if self.gamma_model is not None and self.gamma_total > 0:
+            gamma = self.gamma_total - self.gamma_model.gamma_for(
+                t_step_budget
+            )
+            gamma = min(max(gamma, 1), self.gamma_total - 1)
+        else:
+            # LM default: share ∝ burst throughput (chips / K)
+            eff = chips / max(K, 1e-9)
+            gamma_frac = eff / (self.chips_cluster + eff)
+            gamma = max(int(self.gamma_total * gamma_frac), 1) \
+                if self.gamma_total else 0
+        # --- estimate post-burst completion ---------------------------
+        t_step_after = self._post_burst_step_time(chips, K, cluster_model)
+        t_burst = est.elapsed_s + overhead + steps_rem * t_step_after
+        if t_burst >= est.estimated_total_s:
+            return BurstDecision(
+                False,
+                "burst would not improve completion time "
+                "(overhead dominates)",
+                est_time_stay_s=est.estimated_total_s,
+                est_time_burst_s=t_burst,
+                overhead_s=overhead, correction_K=K,
+                cores_needed=cores_needed,
+            )
+        return BurstDecision(
+            True,
+            "deadline at risk; bursting",
+            chips_burst=chips,
+            gamma=gamma,
+            gamma_total=self.gamma_total,
+            est_time_stay_s=est.estimated_total_s,
+            est_time_burst_s=t_burst,
+            overhead_s=overhead,
+            correction_K=K,
+            cores_needed=cores_needed,
+        )
+
+    def _post_burst_step_time(
+        self, chips_burst: int, K: float,
+        cluster_model: LogCapacityModel | None = None,
+    ) -> float:
+        """Combined throughput of cluster + K-degraded burst slice."""
+        m = cluster_model or self.cluster_model
+        t_cluster = m.predict_time(self.chips_cluster)
+        # effective chips: burst chips are 1/K as productive per the
+        # correction factor (K >= 1 when the cloud is slower)
+        eff = self.chips_cluster + chips_burst / max(K, 1e-9)
+        return m.predict_time(eff) if eff > 0 else t_cluster

@@ -1,0 +1,137 @@
+"""Striped domain decomposition + halo exchange (paper Fig. 2).
+
+The x-axis (width) is cut into contiguous column stripes, one per device
+on a 1-D ("stripe",) mesh; the height is fixed — exactly the paper's
+simplification.  Each timestep exchanges a 2-column halo with stripe
+neighbors via shard_map + lax.ppermute (the jax-native rendering of the
+MPI halo exchange), so per-step traffic is 2 columns × NZ × 4 B per
+neighbor pair — the TPU analogue of the paper's "total message size is
+only 21 KB" measurement, which bench_overheads.py reproduces.
+
+The γ-split maps stripes to environments: with the right γ·(NX/stripes)
+columns assigned to burst-pod devices, only ONE stripe seam crosses the
+slow link (greedy striped placement, paper §3.3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.fwi.solver import FWIConfig, ricker, sponge_taper, velocity_model
+from repro.kernels.stencil.ref import C0, C1, C2
+
+HALO = 2
+
+
+def stripe_mesh(n_devices: int | None = None) -> Mesh:
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    return jax.make_mesh((n,), ("stripe",), devices=devs[:n])
+
+
+def _exchange_halo(p_local: jnp.ndarray, axis_name: str):
+    """p_local (..., NZ, NXl): returns (left_halo, right_halo) each
+    (..., NZ, HALO) received from stripe neighbors (zeros at domain edge).
+    """
+    idx = jax.lax.axis_index(axis_name)
+    n = jax.lax.axis_size(axis_name)
+    right_edge = p_local[..., -HALO:]
+    left_edge = p_local[..., :HALO]
+    # send my right edge to my right neighbor (they receive left halo)
+    from_left = jax.lax.ppermute(
+        right_edge, axis_name, [(i, (i + 1) % n) for i in range(n)]
+    )
+    from_right = jax.lax.ppermute(
+        left_edge, axis_name, [(i, (i - 1) % n) for i in range(n)]
+    )
+    zero = jnp.zeros_like(from_left)
+    left_halo = jnp.where(idx == 0, zero, from_left)
+    right_halo = jnp.where(idx == n - 1, zero, from_right)
+    return left_halo, right_halo
+
+
+def _lap_with_halo(pext: jnp.ndarray, nxl: int) -> jnp.ndarray:
+    """pext (..., NZ, NXl + 2*HALO) -> 4th-order laplacian (..., NZ, NXl).
+
+    x-direction uses the halo-extended array; z-direction uses in-stripe
+    shifts with zero boundary (stripes span full height)."""
+    c = pext[..., HALO: HALO + nxl]
+
+    def shift_z(a, d):
+        out = jnp.roll(a, d, axis=-2)
+        if d > 0:
+            return out.at[..., :d, :].set(0.0)
+        return out.at[..., d:, :].set(0.0)
+
+    lap = 2.0 * C0 * c
+    lap += C1 * (pext[..., HALO - 1: HALO - 1 + nxl]
+                 + pext[..., HALO + 1: HALO + 1 + nxl])
+    lap += C2 * (pext[..., HALO - 2: HALO - 2 + nxl]
+                 + pext[..., HALO + 2: HALO + 2 + nxl])
+    lap += C1 * (shift_z(c, 1) + shift_z(c, -1))
+    lap += C2 * (shift_z(c, 2) + shift_z(c, -2))
+    return lap
+
+
+def make_sharded_step(cfg: FWIConfig, mesh: Mesh):
+    """Sharded timestep: fields (S, NZ, NX) sharded on x over "stripe"."""
+    n = mesh.shape["stripe"]
+    assert cfg.nx % n == 0, (cfg.nx, n)
+    nxl = cfg.nx // n
+    v = velocity_model(cfg)
+    v2dt2 = (v * cfg.dt / cfg.dx) ** 2
+    sponge = sponge_taper(cfg)
+    wavelet = ricker(cfg)
+    pos = cfg.shot_positions()
+    src_z = jnp.asarray(pos[:, 0])
+    src_x = jnp.asarray(pos[:, 1])
+    sh = NamedSharding(mesh, P(None, None, "stripe"))
+    rep = NamedSharding(mesh, P())
+
+    def local_step(p, p_prev, v2, sp, t):
+        # p (S, NZ, NXl) local stripe
+        left, right = _exchange_halo(p, "stripe")
+        pext = jnp.concatenate([left, p, right], axis=-1)
+        lap = _lap_with_halo(pext, p.shape[-1])
+        p_next = (2.0 * p - p_prev + v2 * lap) * sp
+        p_damped = p * sp
+        # source injection: global x position -> local column if owned
+        idx = jax.lax.axis_index("stripe")
+        x0 = idx * p.shape[-1]
+        src = wavelet[t] * (cfg.dt ** 2)
+
+        def inject(pn, zi, xi):
+            owned = (xi >= x0) & (xi < x0 + pn.shape[-1])
+            xloc = jnp.clip(xi - x0, 0, pn.shape[-1] - 1)
+            return pn.at[zi, xloc].add(jnp.where(owned, src, 0.0))
+
+        p_next = jax.vmap(inject)(p_next, src_z, src_x)
+        trace = p_next[:, cfg.receiver_depth, :]
+        return p_next, p_damped, trace
+
+    step = jax.shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(P(None, None, "stripe"), P(None, None, "stripe"),
+                  P(None, "stripe"), P(None, "stripe"), P()),
+        out_specs=(P(None, None, "stripe"), P(None, None, "stripe"),
+                   P(None, "stripe")),
+    )
+
+    @jax.jit
+    def sharded_step(p, p_prev, t):
+        return step(p, p_prev, v2dt2, sponge, t)
+
+    def place(state_fields):
+        return jax.device_put(state_fields, sh)
+
+    return sharded_step, place
+
+
+def halo_bytes_per_step(cfg: FWIConfig, n_stripes: int) -> int:
+    """Per-seam traffic — the paper's 21 KB message-size claim analogue."""
+    return 2 * HALO * cfg.nz * cfg.n_shots * 4  # send+recv, f32

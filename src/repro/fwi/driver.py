@@ -1,0 +1,132 @@
+"""Self-adaptive FWI driver — the paper end-to-end on the real solver.
+
+An FWISession runs the striped sharded solver over the current stripe
+count, measures wall-clock per timestep, and emulates the slower burst
+environment by stretching the measured time with the configured K for
+the share of stripes placed there (per-step synchronization means the
+step takes the slowest environment's time — paper step 8).  The
+ElasticOrchestrator drives monitoring → prediction → burst exactly as
+for LM training; CHECKPOINT/RESHARD are real: fields are pulled to host
+and re-placed under the new stripe mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.orchestrator import Resources, Session
+from repro.fwi.domain import make_sharded_step, stripe_mesh
+from repro.fwi.solver import FWIConfig, ShotState
+
+
+@dataclasses.dataclass
+class TimeModel:
+    """How a step's wall time is derived (DESIGN.md §10).
+
+    measure=True: real wall clock of the sharded solver on this host,
+    scaled by the *modeled* parallel speedup (CPU has one core; stripes
+    over host devices don't speed up wall time) and stretched by the
+    burst environment's K on its work share.
+    """
+
+    chip_seconds_per_step: float | None = None  # None -> measure
+    congestion: dict[int, float] = dataclasses.field(default_factory=dict)
+    congestion_until: int = 10 ** 9
+    congestion_from: int = 0
+    congestion_factor: float = 1.0
+    jitter: float = 0.01
+
+
+class FWISession(Session):
+    def __init__(
+        self,
+        cfg: FWIConfig,
+        res: Resources,
+        start_step: int,
+        restored,
+        *,
+        time_model: TimeModel,
+        rng: np.random.Generator,
+        n_stripes: int | None = None,
+    ):
+        self.cfg = cfg
+        self.res = res
+        self.tm = time_model
+        self.rng = rng
+        n = n_stripes or min(len(jax.devices()), max(res.total_chips, 1))
+        while cfg.nx % n:
+            n -= 1
+        self.mesh = stripe_mesh(n)
+        self.step_fn, place = make_sharded_step(cfg, self.mesh)
+        if restored is not None:
+            st = ShotState(
+                p=jnp.asarray(restored["p"]),
+                p_prev=jnp.asarray(restored["p_prev"]),
+                t=int(restored["t"]),
+            )
+        else:
+            st = ShotState.init(cfg)
+        self.p, self.p_prev = place((st.p, st.p_prev))
+        self.t = st.t
+        self._measured: float | None = None
+
+    def _measure_once(self) -> float:
+        t0 = time.monotonic()
+        p, pp, _ = self.step_fn(self.p, self.p_prev, self.t)
+        jax.block_until_ready(p)
+        dt = time.monotonic() - t0
+        self.p, self.p_prev = p, pp
+        self.t += 1
+        return dt
+
+    def run_step(self, step: int) -> float:
+        wall = self._measure_once()
+        if self.tm.chip_seconds_per_step is not None:
+            # platform-model time: work split over pods, slowest wins
+            times = []
+            for pod, share in zip(self.res.pods, self.res.shares):
+                if share <= 0:
+                    continue
+                t = (self.tm.chip_seconds_per_step * share
+                     / pod.chips * pod.slowdown)
+                if (pod.name == "cluster"
+                        and self.tm.congestion_from <= step
+                        < self.tm.congestion_until):
+                    t *= self.tm.congestion_factor
+                times.append(t)
+            dt = max(times)
+        else:
+            dt = wall
+            k_max = max(
+                (p.slowdown for p, s in zip(self.res.pods, self.res.shares)
+                 if s > 0), default=1.0,
+            )
+            if k_max > 1.0:
+                time.sleep(wall * (k_max - 1.0))
+                dt = wall * k_max
+        return dt * (1.0 + self.tm.jitter * abs(self.rng.standard_normal()))
+
+    def checkpoint(self, step: int):
+        return {
+            "p": np.asarray(self.p),
+            "p_prev": np.asarray(self.p_prev),
+            "t": self.t,
+        }
+
+
+def fwi_session_factory(cfg: FWIConfig, time_model: TimeModel,
+                        *, seed: int = 0, stripes_for=None):
+    rng = np.random.default_rng(seed)
+
+    def factory(res: Resources, start_step: int, restored) -> FWISession:
+        n = stripes_for(res) if stripes_for else None
+        return FWISession(
+            cfg, res, start_step, restored,
+            time_model=time_model, rng=rng, n_stripes=n,
+        )
+
+    return factory

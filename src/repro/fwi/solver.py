@@ -1,0 +1,158 @@
+"""FWI forward modeling — the paper's target application (§3.1).
+
+2-D acoustic wave propagation over a layered velocity model with a salt
+body, Ricker-wavelet point sources ("shots" from the acquisition ship),
+receiver traces sampled at the surface.  Multiple shots are independent
+(task-parallel) over the same velocity model (data-parallel) — exactly
+the structure the paper exploits to split work between environments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.stencil.ops import wave_step
+
+
+@dataclasses.dataclass(frozen=True)
+class FWIConfig:
+    nz: int = 600                 # paper Table 2: 600 x 600 grid
+    nx: int = 600
+    dt: float = 5e-4              # s
+    dx: float = 5.0               # m
+    timesteps: int = 600
+    n_shots: int = 4              # paper Table 2: 4 shots
+    sponge_width: int = 32
+    sponge_strength: float = 0.0125
+    source_freq: float = 12.0     # Hz Ricker
+    receiver_depth: int = 2
+
+    def shot_positions(self) -> np.ndarray:
+        xs = np.linspace(self.nx * 0.2, self.nx * 0.8, self.n_shots)
+        return np.stack(
+            [np.full(self.n_shots, 4.0), xs], axis=1
+        ).astype(np.int32)
+
+
+def velocity_model(cfg: FWIConfig) -> jnp.ndarray:
+    """Layered model with a salt dome (paper Fig. 3 bottom)."""
+    z = np.arange(cfg.nz)[:, None]
+    x = np.arange(cfg.nx)[None, :]
+    v = 1500.0 + 2.2 * z                       # depth gradient, m/s
+    for depth, dv in ((cfg.nz // 3, 400.0), (cfg.nz // 2, 500.0)):
+        v = v + dv * (z > depth)
+    # salt dome: high-velocity ellipse
+    cz, cx = int(cfg.nz * 0.62), int(cfg.nx * 0.5)
+    dome = ((z - cz) / (0.18 * cfg.nz)) ** 2 + (
+        (x - cx) / (0.25 * cfg.nx)
+    ) ** 2 < 1.0
+    v = np.where(dome, 4500.0, v)
+    return jnp.asarray(v, jnp.float32)
+
+
+def sponge_taper(cfg: FWIConfig) -> jnp.ndarray:
+    w = cfg.sponge_width
+    z = np.arange(cfg.nz)[:, None] + np.zeros((1, cfg.nx))
+    x = np.arange(cfg.nx)[None, :] + np.zeros((cfg.nz, 1))
+    dist = np.minimum.reduce([
+        z, cfg.nz - 1 - z, x, cfg.nx - 1 - x,
+        np.full((cfg.nz, cfg.nx), float(w)),
+    ])
+    taper = np.exp(-(cfg.sponge_strength * (w - dist)) ** 2)
+    return jnp.asarray(np.where(dist >= w, 1.0, taper), jnp.float32)
+
+
+def ricker(cfg: FWIConfig) -> jnp.ndarray:
+    t = np.arange(cfg.timesteps) * cfg.dt
+    t0 = 1.2 / cfg.source_freq
+    a = (np.pi * cfg.source_freq * (t - t0)) ** 2
+    return jnp.asarray((1 - 2 * a) * np.exp(-a) * 1e3, jnp.float32)
+
+
+@dataclasses.dataclass
+class ShotState:
+    """Propagation state for a batch of shots — the checkpointable unit
+    (paper Fig.1 step 2 saves exactly this)."""
+
+    p: jnp.ndarray        # (S, NZ, NX)
+    p_prev: jnp.ndarray
+    t: int
+
+    @staticmethod
+    def init(cfg: FWIConfig) -> "ShotState":
+        shape = (cfg.n_shots, cfg.nz, cfg.nx)
+        return ShotState(
+            p=jnp.zeros(shape, jnp.float32),
+            p_prev=jnp.zeros(shape, jnp.float32),
+            t=0,
+        )
+
+
+def make_step_fn(cfg: FWIConfig, *, use_pallas: bool = False):
+    """Returns step(state_fields, t) advancing all shots one timestep."""
+    v = velocity_model(cfg)
+    v2dt2 = (v * cfg.dt / cfg.dx) ** 2
+    sponge = sponge_taper(cfg)
+    wavelet = ricker(cfg)
+    pos = cfg.shot_positions()
+    src_z = jnp.asarray(pos[:, 0])
+    src_x = jnp.asarray(pos[:, 1])
+
+    def one_shot(p, p_prev, t, zi, xi):
+        p_next, p_damped = wave_step(
+            p, p_prev, v2dt2, sponge, use_pallas=use_pallas
+        )
+        src = wavelet[t] * (cfg.dt ** 2)
+        p_next = p_next.at[zi, xi].add(src)
+        return p_next, p_damped
+
+    @jax.jit
+    def step(p, p_prev, t):
+        p_next, p_damped = jax.vmap(
+            one_shot, in_axes=(0, 0, None, 0, 0)
+        )(p, p_prev, t, src_z, src_x)
+        trace = p_next[:, cfg.receiver_depth, :]     # (S, NX) receivers
+        return p_next, p_damped, trace
+
+    return step
+
+
+def make_scan_runner(cfg: FWIConfig, *, use_pallas: bool = False):
+    """jit-once multi-step propagator (lax.scan over timesteps) — used by
+    the calibration sweeps so python dispatch doesn't pollute timings."""
+    step = make_step_fn(cfg, use_pallas=use_pallas)
+
+    @functools.partial(jax.jit, static_argnames=("steps",))
+    def run(p, p_prev, t0, steps: int):
+        def body(carry, i):
+            p, pp = carry
+            pn, pd, _ = step(p, pp, t0 + i)
+            return (pn, pd), None
+
+        (p, pp), _ = jax.lax.scan(body, (p, p_prev), jnp.arange(steps))
+        return p, pp
+
+    return run
+
+
+def run_forward(cfg: FWIConfig, *, use_pallas: bool = False,
+                state: ShotState | None = None,
+                steps: int | None = None):
+    """Propagate `steps` timesteps (default: to completion).  Returns
+    (state, traces (S, T, NX) for the steps actually run)."""
+    step = make_step_fn(cfg, use_pallas=use_pallas)
+    st = state or ShotState.init(cfg)
+    steps = steps if steps is not None else cfg.timesteps - st.t
+    traces = []
+    p, pp = st.p, st.p_prev
+    for t in range(st.t, st.t + steps):
+        p, pp, tr = step(p, pp, t)
+        traces.append(tr)
+    out = ShotState(p=p, p_prev=pp, t=st.t + steps)
+    return out, jnp.stack(traces, axis=1) if traces else jnp.zeros(
+        (cfg.n_shots, 0, cfg.nx), jnp.float32
+    )

@@ -1,0 +1,125 @@
+"""Pallas TPU flash attention (blockwise online softmax), causal GQA.
+
+The prefill hot spot: the chunked-attention formulation in
+models/attention.py is the portable/sharded path the dry-run lowers;
+this kernel is the TPU deployment target for the inner per-shard
+computation.
+
+Tiling (per grid step (b, h, iq, jk)):
+  q block (BQ, D) VMEM-resident across the jk sweep; k/v blocks (BK, D)
+  stream through VMEM; the (BQ, BK) score tile lives in registers/VMEM
+  and never reaches HBM — the flash idea.  Running row-max m, row-sum l
+  and the output accumulator sit in VMEM scratch that persists across
+  the sequential jk grid dimension (TPU grids execute in order).  GQA
+  maps kv-head jk-blocks via h // rep in the BlockSpec index maps.
+  BQ/BK default 128 — MXU-aligned (multiples of 128 on the contracted
+  and lane dims); D is the natural 64/128.
+Causal handling: score tiles strictly above the diagonal are skipped via
+pl.when (no DMA waste on masked work); the diagonal tile masks
+elementwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, scale: float, causal: bool):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * bq
+    k_start = jk * bk
+    # causal: skip tiles entirely above the diagonal
+    run = (not causal) or (k_start <= q_start + bq - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                     # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(jk == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bq", "bk", "causal", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,    # (B, H, S, D)
+    k: jax.Array,    # (B, KH, S, D)
+    v: jax.Array,
+    *,
+    bq: int = 128,
+    bk: int = 128,
+    causal: bool = True,
+    interpret: bool = True,
+):
+    B, H, S, D = q.shape
+    KH = k.shape[1]
+    rep = H // KH
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    grid = (B, H, S // bq, S // bk)
+    scale = D ** -0.5
+
+    q_spec = pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0))
+    kv_spec = pl.BlockSpec(
+        (1, 1, bk, D), lambda b, h, i, j: (b, h // rep, j, 0)
+    )
+    o_spec = pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0))
+
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, bq=bq, bk=bk, scale=scale, causal=causal
+        ),
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running row-max m
+            pltpu.VMEM((bq,), jnp.float32),       # running row-sum l
+            pltpu.VMEM((bq, D), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

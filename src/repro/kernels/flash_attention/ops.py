@@ -1,0 +1,22 @@
+"""Jit'd wrapper: Pallas flash attention with jnp fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def attention(q, k, v, *, causal=True, use_pallas=False,
+              bq: int = 128, bk: int = 128, interpret: bool = True):
+    if use_pallas:
+        return flash_attention(
+            q, k, v, causal=causal, bq=bq, bk=bk, interpret=interpret
+        )
+    return attention_ref(q, k, v, causal=causal)
+
+
+attention_jit = jax.jit(
+    attention, static_argnames=("causal", "use_pallas", "bq", "bk",
+                                "interpret"),
+)

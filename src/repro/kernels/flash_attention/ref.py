@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: causal GQA attention (full softmax)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,   # (B, H, S, D)
+    k: jnp.ndarray,   # (B, KH, S, D)
+    v: jnp.ndarray,   # (B, KH, S, D)
+    *,
+    causal: bool = True,
+) -> jnp.ndarray:
+    B, H, S, D = q.shape
+    KH = k.shape[1]
+    rep = H // KH
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * (D ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), v)

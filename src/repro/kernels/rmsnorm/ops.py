@@ -1,0 +1,24 @@
+"""Jit'd wrapper for fused residual+RMSNorm."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_residual_pallas
+from repro.kernels.rmsnorm.ref import rmsnorm_residual_ref
+
+
+def rmsnorm_residual(x, res, scale, *, eps: float = 1e-5,
+                     use_pallas=False, bn: int = 256,
+                     interpret: bool = True):
+    if use_pallas:
+        out = rmsnorm_residual_pallas(
+            x, res, scale, bn=bn, eps=eps, interpret=interpret
+        )
+        return out[0], out[1]
+    return rmsnorm_residual_ref(x, res, scale, eps)
+
+
+rmsnorm_residual_jit = jax.jit(
+    rmsnorm_residual,
+    static_argnames=("eps", "use_pallas", "bn", "interpret"),
+)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: fused residual-add + RMSNorm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_residual_ref(x, res, scale, eps: float = 1e-5):
+    """Returns (normed(x+res), x+res) — one fused read of x/res."""
+    h = x.astype(jnp.float32) + res.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    normed = h * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+    return normed.astype(x.dtype), h.astype(x.dtype)

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: Mamba-2 SSD intra-chunk block.
+
+Grid (batch·chunks, heads); per step the whole (Q, ·) chunk for one head
+is VMEM-resident: Q=128/256, P=64, N<=128 gives ~((Q,P)+(Q,N)·2+(Q,Q))·4B
+≈ 0.5–1.2 MB — comfortably inside VMEM, with all three matmuls
+(C·Bᵀ (Q,N)x(N,Q), (decay∘CB)·xdt (Q,Q)x(Q,P), state Bᵀ·xdt) hitting the
+MXU at aligned sizes.  The decay matrix exp(csum_q − csum_t) is built in
+registers from the (Q,) cumulative-decay vector — never from HBM.
+
+The inter-chunk recurrence (a cheap (H,N,P) lax.scan over chunks) stays
+in XLA (models/mamba2.ssd_chunked): it is O(S/Q) sequential and memory-
+light, exactly the part a kernel would not help.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(xdt_ref, b_ref, c_ref, csum_ref, y_ref, state_ref):
+    xdt = xdt_ref[0, 0].astype(jnp.float32)      # (Q, P)
+    b = b_ref[0, 0].astype(jnp.float32)          # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)          # (Q, N)
+    csum = csum_ref[0, 0].astype(jnp.float32)    # (Q,)
+    Q = xdt.shape[0]
+
+    cb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # (Q, Q)
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    diff = csum[:, None] - csum[None, :]
+    decay = jnp.where(qpos >= tpos, jnp.exp(diff), 0.0)
+    y = jax.lax.dot_general(
+        cb * decay, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    to_end = jnp.exp(csum[-1] - csum)             # (Q,)
+    state = jax.lax.dot_general(
+        b * to_end[:, None], xdt, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                             # (N, P)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    state_ref[0, 0] = state
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(
+    xdt: jax.Array,    # (BC, H, Q, P)
+    b: jax.Array,      # (BC, H, Q, N)
+    c: jax.Array,      # (BC, H, Q, N)
+    csum: jax.Array,   # (BC, H, Q)
+    *,
+    interpret: bool = True,
+):
+    BC, H, Q, P = xdt.shape
+    N = b.shape[-1]
+    grid = (BC, H)
+    spec = lambda *dims: pl.BlockSpec(
+        (1, 1) + dims, lambda i, h: (i, h) + (0,) * len(dims)
+    )
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[spec(Q, P), spec(Q, N), spec(Q, N), spec(Q)],
+        out_specs=[spec(Q, P), spec(N, P)],
+        out_shape=[
+            jax.ShapeDtypeStruct((BC, H, Q, P), xdt.dtype),
+            jax.ShapeDtypeStruct((BC, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, b, c, csum)

@@ -1,0 +1,19 @@
+"""Jit'd wrapper for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd_chunk_pallas
+from repro.kernels.ssd.ref import ssd_chunk_ref
+
+
+def ssd_chunk(xdt, b, c, csum, *, use_pallas=False, interpret: bool = True):
+    """xdt (BC,H,Q,P), b/c (BC,H,Q,N), csum (BC,H,Q) ->
+    (y_intra (BC,H,Q,P), state (BC,H,N,P))."""
+    if use_pallas:
+        y, st = ssd_chunk_pallas(xdt, b, c, csum, interpret=interpret)
+        return y, st
+    return ssd_chunk_ref(xdt, b, c, csum)
+
+
+ssd_chunk_jit = jax.jit(ssd_chunk, static_argnames=("use_pallas", "interpret"))

@@ -1,0 +1,29 @@
+"""Jit'd wrapper for the wave-step kernel with a portable fallback.
+
+use_pallas=True runs the Pallas kernel (interpret mode on CPU — the
+kernel body executes with real Pallas semantics, validating BlockSpec
+tiling/halo logic); use_pallas=False is the pure-jnp oracle used in the
+sharded solver (XLA fuses it adequately for the dry-run; the Pallas
+path is the TPU deployment target).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.stencil.kernel import wave_step_pallas
+from repro.kernels.stencil.ref import wave_step_ref
+
+
+def wave_step(p, p_prev, v2dt2, sponge, *, use_pallas=False,
+              bz: int = 128, interpret: bool = True):
+    if use_pallas:
+        out = wave_step_pallas(
+            p, p_prev, v2dt2, sponge, bz=bz, interpret=interpret
+        )
+        return out[0], out[1]
+    return wave_step_ref(p, p_prev, v2dt2, sponge)
+
+
+wave_step_jit = jax.jit(
+    wave_step, static_argnames=("use_pallas", "bz", "interpret")
+)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the FWI wave-equation timestep (kernel ref).
+
+2-D acoustic wave equation, 2nd-order in time, 4th-order in space:
+
+    p_next = 2·p − p_prev + (v·dt)²·∇²p        (+ sponge damping)
+
+4th-order central Laplacian coefficients per axis:
+    [-1/12, 4/3, -5/2, 4/3, -1/12] / h²
+
+The sponge multiplies BOTH p_next and p (the damped p becomes the next
+step's p_prev), which is why the kernel emits two outputs — one fused
+pass over the fields (the memory-bound hot loop of the paper's app).
+Boundary cells use zero halo (free-surface-ish); the sponge absorbs
+before reflections matter.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+C0 = -5.0 / 2.0
+C1 = 4.0 / 3.0
+C2 = -1.0 / 12.0
+
+
+def _shift(p: jnp.ndarray, dz: int, dx: int) -> jnp.ndarray:
+    """Shift with zero fill (zero halo at physical boundary)."""
+    out = p
+    if dz:
+        out = jnp.roll(out, dz, axis=-2)
+        if dz > 0:
+            out = out.at[..., :dz, :].set(0.0)
+        else:
+            out = out.at[..., dz:, :].set(0.0)
+    if dx:
+        out = jnp.roll(out, dx, axis=-1)
+        if dx > 0:
+            out = out.at[..., :, :dx].set(0.0)
+        else:
+            out = out.at[..., :, dx:].set(0.0)
+    return out
+
+
+def laplacian(p: jnp.ndarray, inv_h2: float = 1.0) -> jnp.ndarray:
+    lap = 2.0 * C0 * p
+    for d in (1, 2):
+        c = C1 if d == 1 else C2
+        lap = lap + c * (
+            _shift(p, d, 0) + _shift(p, -d, 0)
+            + _shift(p, 0, d) + _shift(p, 0, -d)
+        )
+    return lap * inv_h2
+
+
+def wave_step_ref(
+    p: jnp.ndarray,        # (..., NZ, NX) current pressure
+    p_prev: jnp.ndarray,   # (..., NZ, NX)
+    v2dt2: jnp.ndarray,    # (NZ, NX) or broadcastable: (v·dt)²/h²
+    sponge: jnp.ndarray,   # (NZ, NX) damping taper in [0, 1]
+):
+    """One timestep.  Returns (p_next, p_damped) both sponge-damped."""
+    lap = laplacian(p)
+    p_next = (2.0 * p - p_prev + v2dt2 * lap) * sponge
+    return p_next, p * sponge

@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the dry-run needs 512 placeholder host devices to build the
+production meshes.  Nothing else in the repo sets this flag — smoke tests
+and benches see the real device count.
+
+Per cell this produces a JSON artifact with:
+  - compiled memory_analysis (per-device bytes vs the 16 GiB v5e budget)
+  - cost_analysis FLOPs / bytes
+  - collective operand bytes parsed from the compiled HLO (ICI vs DCI)
+  - the three roofline terms + dominant bottleneck (launch/roofline.py)
+  - MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (serve) and the
+    useful-compute ratio
+
+Usage:
+  python -m repro.launch.dryrun --all                      # full matrix
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --summarize                # markdown table
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ALL_ARCHS,
+    RunConfig,
+    SHAPES,
+    cell_is_runnable,
+    get_config,
+    input_specs,
+)
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.hw import TPU_V5E
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import model_flops, roofline_terms
+from repro.models import model as M
+from repro.optim import make_optimizer, warmup_cosine
+from repro.runtime import serve_step, train_step as ts
+from repro.sharding.rules import (
+    abstract_params,
+    cast_schema,
+    make_rules,
+    param_shardings,
+)
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# Per-arch train microbatch (global): bounds live activations per µ-step.
+TRAIN_MICROBATCH = {
+    "granite-8b": 64, "yi-6b": 64, "yi-9b": 32, "minitron-8b": 64,
+    "qwen2-vl-72b": 16, "deepseek-v2-236b": 16, "deepseek-v3-671b": 32,
+    "whisper-large-v3": None, "mamba2-370m": 64, "jamba-v0.1-52b": 16,
+}
+
+# Megatron-SP residuals for the big models (remat stash /16; §Perf A)
+SEQ_SHARD = {"deepseek-v2-236b", "deepseek-v3-671b", "qwen2-vl-72b",
+             "jamba-v0.1-52b", "whisper-large-v3"}
+
+
+# ≥200B models accumulate grads in bf16 (param-sized fp32 accumulators
+# would not fit pod HBM; Adafactor/8-bit moments tolerate bf16 grads).
+BF16_GRADS = {"deepseek-v2-236b", "deepseek-v3-671b"}
+
+
+def run_config(cfg, shape) -> RunConfig:
+    return RunConfig(
+        microbatch=TRAIN_MICROBATCH.get(cfg.name, 64)
+        if shape.kind == "train" else None,
+        grad_dtype="bfloat16" if cfg.name in BF16_GRADS else "float32",
+        seq_shard=cfg.name in SEQ_SHARD and shape.kind == "train",
+        loss_chunk=512,
+    )
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (jitted_fn, example_args(abstract), donate) for one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    run = run_config(cfg, shape)
+    rules = make_rules(
+        mesh, "train" if SHAPES[shape_name].kind == "train" else "serve",
+        flat_dp=cfg.flat_dp,
+    )
+    if run.seq_shard:
+        rules = dataclasses.replace(
+            rules, rules={**rules.rules, "seq_res": (("model",),)}
+        )
+    in_specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer, warmup_cosine())
+        sch = ts.state_schema(cfg, run, opt)
+        state_abs = abstract_params(sch)
+        state_sh = ts.state_shardings(sch, rules, run)
+        batch_sh = ts.batch_shardings(in_specs, rules)
+        fn = ts.build_train_step(cfg, run, opt, rules)
+        jf = jax.jit(
+            fn,
+            in_shardings=(state_sh, batch_sh),
+            donate_argnums=(0,),
+        )
+        return jf, (state_abs, in_specs)
+
+    # serving weights are bf16 (inference-cast), matching real deployments
+    psch = cast_schema(M.schema(cfg), jnp.bfloat16)
+    params_abs = abstract_params(psch)
+    params_sh = param_shardings(psch, rules)
+    input_sh = serve_step.serve_input_shardings(in_specs, rules)
+
+    if shape.kind == "prefill":
+        fn = serve_step.build_prefill(cfg, rules)
+        jf = jax.jit(fn, in_shardings=(params_sh, input_sh))
+        return jf, (params_abs, in_specs)
+
+    # decode
+    cache_sch = M.cache_schema(cfg, shape.global_batch, shape.seq_len)
+    cache_abs = abstract_params(cache_sch)
+    cache_sh = param_shardings(cache_sch, rules)
+    fn = serve_step.build_decode(cfg, rules)
+    jf = jax.jit(
+        fn,
+        in_shardings=(params_sh, cache_sh, input_sh),
+        donate_argnums=(1,),
+    )
+    return jf, (params_abs, cache_abs, in_specs)
+
+
+def _mem_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": repr(e)}
+    out = {}
+    for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["peak_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+        )
+    return out
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                out_dir: Path = ARTIFACTS, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind,
+    }
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        _write(rec, out_dir)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        jf, args = build_cell(arch, shape_name, mesh)
+        lowered = jf.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = repr(e)
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        _write(rec, out_dir)
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: "
+                  f"ERROR {e!r}", flush=True)
+        return rec
+
+    # NOTE: compiled.cost_analysis() counts while bodies ONCE — with
+    # scan-over-layers that undercounts ~num_layers×.  launch/hlo_cost.py
+    # multiplies trip counts; raw values kept for reference.
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    t0 = time.time()
+    hc = hlo_analyze(hlo, total_devices=chips, pod_size=256)
+    t_analyze = time.time() - t0
+    flops = hc["flops"]
+    bytes_acc = hc["hbm_bytes"]
+    mem = _mem_analysis_dict(compiled)
+    rl = roofline_terms(flops, bytes_acc, hc)
+
+    total, active = M.param_counts(cfg)
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind in ("train", "prefill") else 1
+    )
+    mf = model_flops(active, tokens, train=shape.kind == "train")
+    mf_per_dev = mf / chips
+
+    rec.update({
+        "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "analyze_s": round(t_analyze, 2),
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": bytes_acc,
+        "collectives": {
+            "total_bytes": hc["collective_bytes"],
+            "dci_bytes": hc["collective_dci_bytes"],
+            "by_type": hc["collective_by_type"],
+            "count": hc["collective_count"],
+        },
+        "while_trips": hc["while_trips"],
+        "hlo_warnings": hc["warnings"],
+        "memory": mem,
+        "roofline": rl,
+        "params_total": total,
+        "params_active": active,
+        "tokens_per_step": tokens,
+        "model_flops_per_dev": mf_per_dev,
+        "useful_compute_ratio": mf_per_dev / flops if flops else 0.0,
+        "hbm_budget_ok": mem.get("peak_bytes_per_device", 0)
+        <= TPU_V5E.hbm_bytes,
+        "xla_cost_analysis_raw": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+    })
+    _write(rec, out_dir)
+    if verbose:
+        peak = mem.get("peak_bytes_per_device", 0) / 2**30
+        print(
+            f"[dryrun] {arch} × {shape_name} × {mesh_name}: ok "
+            f"compile={t_compile:.1f}s dom={rl['dominant']} "
+            f"frac={rl['roofline_fraction']:.3f} peak={peak:.2f}GiB",
+            flush=True,
+        )
+    return rec
+
+
+def _cell_path(rec: dict, out_dir: Path) -> Path:
+    return out_dir / rec["mesh"] / rec["arch"] / f"{rec['shape']}.json"
+
+
+def _write(rec: dict, out_dir: Path):
+    p = _cell_path(rec, out_dir)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(rec, indent=1))
+
+
+def load_all(out_dir: Path = ARTIFACTS) -> list[dict]:
+    return [
+        json.loads(p.read_text()) for p in sorted(out_dir.glob("*/*/*.json"))
+    ]
+
+
+def summarize(out_dir: Path = ARTIFACTS) -> str:
+    rows = load_all(out_dir)
+    lines = [
+        "| arch | shape | mesh | status | dom | T_comp(s) | T_mem(s) | "
+        "T_coll(s) | frac | useful | peak GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['status']} | — | — | — | — | — | — | — | — |"
+            )
+            continue
+        rl = r["roofline"]
+        peak = r["memory"].get("peak_bytes_per_device", 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{rl['dominant']} | {rl['compute']:.4f} | {rl['memory']:.4f} | "
+            f"{rl['collective']:.4f} | {rl['roofline_fraction']:.3f} | "
+            f"{r['useful_compute_ratio']:.3f} | {peak:.2f} | "
+            f"{'Y' if r['hbm_budget_ok'] else 'N'} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells that already have artifacts")
+    ap.add_argument("--summarize", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    if args.summarize:
+        print(summarize(out_dir))
+        return
+
+    archs = [args.arch] if args.arch else ALL_ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh
+    ]
+    if not (args.all or args.arch or args.shape):
+        ap.error("pass --all or --arch/--shape")
+
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = {
+                    "arch": arch, "shape": shape,
+                    "mesh": "multi" if multi else "single",
+                }
+                p = _cell_path(rec, out_dir)
+                if p.exists() and not args.force:
+                    prev = json.loads(p.read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[dryrun] cached: {p}", flush=True)
+                        continue
+                dryrun_cell(arch, shape, multi, out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Target-hardware constants (TPU v5e) used by the roofline analysis.
+
+This container runs on CPU; v5e is the *target*.  All roofline terms in
+EXPERIMENTS.md are derived from compiled HLO + these constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float     # FLOP/s
+    hbm_bw: float              # bytes/s
+    hbm_bytes: int             # capacity
+    ici_link_bw: float         # bytes/s per link per direction
+    ici_links: int             # links per chip participating in a collective
+    dci_bw: float              # inter-pod (data-center interconnect) bytes/s/chip
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,    # 197 TFLOP/s bf16
+    hbm_bw=819e9,              # 819 GB/s
+    hbm_bytes=16 * 1024**3,    # 16 GiB
+    ici_link_bw=50e9,          # ~50 GB/s per link (brief-provided constant)
+    ici_links=2,               # 2D torus on v5e: 2 axes usable per transfer
+    dci_bw=6.25e9,             # ~50 Gbit/s/chip-equivalent across pods
+)
+
+
+def pod_flops(chips: int, spec: ChipSpec = TPU_V5E) -> float:
+    return chips * spec.peak_flops_bf16
+
+
+def pod_hbm_bw(chips: int, spec: ChipSpec = TPU_V5E) -> float:
+    return chips * spec.hbm_bw
+
+
+def pod_ici_bw(chips: int, spec: ChipSpec = TPU_V5E) -> float:
+    return chips * spec.ici_link_bw

@@ -1,0 +1,322 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Perf-iteration harness (EXPERIMENTS.md §Perf).
+
+Each experiment = (cell, variant): a named transform over the ModelConfig
+/ RunConfig of one (arch × shape × mesh) cell.  The harness lowers +
+compiles the variant, runs the HLO cost model, and writes
+artifacts/perf/<arch>.<shape>.<mesh>/<variant>.json so every
+hypothesis -> change -> measure step is recorded next to its baseline.
+
+    python -m repro.launch.perf --list
+    python -m repro.launch.perf --run dsv3-ep
+"""
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import RunConfig, SHAPES, get_config, input_specs
+from repro.launch import dryrun as dr
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import model_flops, roofline_terms
+from repro.models import model as M
+from repro.optim import make_optimizer, warmup_cosine
+from repro.runtime import serve_step, train_step as ts
+from repro.sharding.rules import (
+    abstract_params,
+    cast_schema,
+    make_rules,
+    param_shardings,
+)
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "perf"
+
+
+@dataclasses.dataclass
+class Experiment:
+    name: str
+    arch: str
+    shape: str
+    mesh: str                       # single | multi
+    hypothesis: str
+    cfg_fn: callable = None         # ModelConfig -> ModelConfig
+    run_fn: callable = None         # RunConfig -> RunConfig
+
+
+def _moe_ep(cfg):
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, ep_over_dp=True)
+    )
+
+
+def _moe_ep_scatter(cfg):
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, ep_over_dp=True,
+                                     dispatch="scatter")
+    )
+
+
+def _moe_no_ep(cfg):
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, ep_over_dp=False)
+    )
+
+
+EXPERIMENTS = {
+    # --- cell A: deepseek-v3-671b × train_4k × single (collective-bound)
+    "dsv3-baseline-fsdp": Experiment(
+        "dsv3-baseline-fsdp", "deepseek-v3-671b", "train_4k", "single",
+        "Paper-faithful baseline record (pre-hillclimb defaults): FSDP-"
+        "gathered experts, no SP. Kept regenerable so baseline vs "
+        "optimized stay side by side in artifacts/perf.",
+        cfg_fn=_moe_no_ep,
+    ),
+    "dsv3-ep": Experiment(
+        "dsv3-ep", "deepseek-v3-671b", "train_4k", "single",
+        "FSDP regathers expert weights every use (~3.7TB/dev AG). EP over "
+        "(data×model) moves TOKENS via all-to-all instead: per layer "
+        "~117MB/dev vs ~1.5GB/dev of weight AG, and expert grads become "
+        "fully local. Predict T_coll 35.5s -> <8s.",
+        cfg_fn=_moe_ep,
+    ),
+    "dsv3-ep-mb64": Experiment(
+        "dsv3-ep-mb64", "deepseek-v3-671b", "train_4k", "single",
+        "On top of EP: double microbatch 32->64 halves the number of "
+        "dense-layer FSDP gather rounds per step. Predict residual AG "
+        "halves; activation memory doubles (still under budget).",
+        cfg_fn=_moe_ep,
+        run_fn=lambda r: dataclasses.replace(r, microbatch=64),
+    ),
+    "dsv3-ep-scatter": Experiment(
+        "dsv3-ep-scatter", "deepseek-v3-671b", "train_4k", "single",
+        "On top of EP: scatter dispatch removes the one-hot dispatch/"
+        "combine einsum FLOPs (2·T·(E·C)·d per group ≈ 1/3 of expert "
+        "FLOPs). Predict T_comp 19s -> ~13s.",
+        cfg_fn=_moe_ep_scatter,
+    ),
+    "dsv3-ep-sp": Experiment(
+        "dsv3-ep-sp", "deepseek-v3-671b", "train_4k", "single",
+        "On top of EP: the peak is the 58-layer f32 remat stash "
+        "(12.7 GiB: XLA folds the first-use f32 convert into the saved "
+        "residual). Sequence-shard the residual stream over 'model' "
+        "(Megatron-SP): stash /16; adds AG/RS ~tokens·d·2B per layer "
+        "(~0.9s total). Predict peak 56 -> ~45 GiB, T_coll +1s.",
+        cfg_fn=_moe_ep,
+        run_fn=lambda r: dataclasses.replace(r, seq_shard=True),
+    ),
+    "dsv3-ep-sp-multi": Experiment(
+        "dsv3-ep-sp-multi", "deepseek-v3-671b", "train_4k", "multi",
+        "Params+grads alone are 10.4 GB/chip at 256 chips — the single-"
+        "pod cell cannot fit 16 GiB with any activation recipe. On 512 "
+        "chips (2 pods) static state halves. Predict peak ~20 GiB "
+        "(borderline; 4 pods would clear it).",
+        cfg_fn=_moe_ep,
+        run_fn=lambda r: dataclasses.replace(r, seq_shard=True),
+    ),
+    "dsv3-ep-sp-nomb": Experiment(
+        "dsv3-ep-sp-nomb", "deepseek-v3-671b", "train_4k", "single",
+        "With SP the remat stash is tiny; dropping grad accumulation "
+        "removes the separate 5.2 GB/dev accumulator and the per-µbatch "
+        "FSDP gather rounds. Predict peak -4 GiB, T_coll down.",
+        cfg_fn=_moe_ep,
+        run_fn=lambda r: dataclasses.replace(r, seq_shard=True,
+                                             microbatch=None),
+    ),
+    # --- cell B: whisper-large-v3 × train_4k × single (worst fraction)
+    "whisper-mb256": Experiment(
+        "whisper-mb256", "whisper-large-v3", "train_4k", "single",
+        "Memory term is dominated by per-µbatch encoder+cross-KV "
+        "recompute under full remat. Run the whole batch in one µstep "
+        "(no accumulation): encoder runs once. Predict T_mem 24.9s -> "
+        "~14s.",
+        run_fn=lambda r: dataclasses.replace(r, microbatch=None),
+    ),
+    "whisper-mb256-dots": Experiment(
+        "whisper-mb256-dots", "whisper-large-v3", "train_4k", "single",
+        "On top of mb256: remat 'dots' keeps matmul outputs (incl. "
+        "cross-KV) so backward does not recompute the encoder path. "
+        "Model is 1.5B — activations fit. Predict T_mem -> ~8s.",
+        run_fn=lambda r: dataclasses.replace(r, microbatch=None,
+                                             remat="dots"),
+    ),
+    "whisper-flatdp": Experiment(
+        "whisper-flatdp", "whisper-large-v3", "train_4k", "single",
+        "Root cause of the 0.099 fraction: 20 heads % 16 model ranks != 0"
+        " -> attention replicated on every model rank (16x waste in both "
+        "compute and memory terms). Flat DP uses 'model' as a second "
+        "data axis (batch 256 = 16x16, per-dev batch 1). Predict "
+        "T_comp 2.5 -> ~0.2s, T_mem 25 -> ~1.6s.",
+        cfg_fn=lambda c: dataclasses.replace(c, flat_dp=True),
+    ),
+    "whisper-flatdp-dots": Experiment(
+        "whisper-flatdp-dots", "whisper-large-v3", "train_4k", "single",
+        "Flat DP + remat dots (per-dev batch 1: activations are tiny, "
+        "full remat is pure waste). Predict T_comp down another ~25%.",
+        cfg_fn=lambda c: dataclasses.replace(c, flat_dp=True),
+        run_fn=lambda r: dataclasses.replace(r, remat="dots"),
+    ),
+    "whisper-flatdp-full": Experiment(
+        "whisper-flatdp-full", "whisper-large-v3", "train_4k", "single",
+        "flat_dp alone didn't engage: microbatch 128 < 256 so the batch "
+        "dim can't split 256-way and falls back to data-only. Run the "
+        "full batch per step (no accumulation): per-dev batch 1, "
+        "attention finally distributed. Predict T_comp ~0.2s, T_mem "
+        "~1.6s.",
+        cfg_fn=lambda c: dataclasses.replace(c, flat_dp=True),
+        run_fn=lambda r: dataclasses.replace(r, microbatch=None,
+                                             remat="dots"),
+    ),
+    # --- cell C: granite-8b × train_4k × multi (the paper's technique)
+    "granite-multi-int8": Experiment(
+        "granite-multi-int8", "granite-8b", "train_4k", "multi",
+        "Cross-pod DCI traffic is the paper's slow link. int8 gradient "
+        "exchange over the pod axis cuts DCI bytes ~4x vs fp32 wire. "
+        "Predict collective_dci -> /4.",
+        run_fn=lambda r: dataclasses.replace(
+            r, gradient_compression="int8"),
+    ),
+    "granite-multi-pp": Experiment(
+        "granite-multi-pp", "granite-8b", "train_4k", "multi",
+        "PP over the pod axis instead of cross-pod DP: only stage-"
+        "boundary activations cross DCI (napkin: ~66 MB/dev vs 1.3 GB/dev "
+        "of gradient exchange — ~20x less slow-link traffic), and layer "
+        "grads never leave their pod. Cost: pipeline bubble "
+        "(stages-1)/(n_micro+stages-1) ≈ 11% at 8 µbatches.",
+        run_fn=lambda r: dataclasses.replace(
+            r, pipeline_stages=2, pp_microbatches=8, microbatch=None),
+    ),
+    "granite-multi-mb128": Experiment(
+        "granite-multi-mb128", "granite-8b", "train_4k", "multi",
+        "Fewer accumulation rounds -> fewer FSDP gather sweeps. "
+        "microbatch 64->128 halves gather volume; activation checkpoint "
+        "memory doubles. Predict T_coll 1.92 -> ~1.1s.",
+        run_fn=lambda r: dataclasses.replace(r, microbatch=128),
+    ),
+}
+
+
+def build_variant(exp: Experiment):
+    cfg = get_config(exp.arch)
+    if exp.cfg_fn:
+        cfg = exp.cfg_fn(cfg)
+    shape = SHAPES[exp.shape]
+    run = dr.run_config(cfg, shape)
+    if exp.run_fn:
+        run = exp.run_fn(run)
+    mesh = make_production_mesh(multi_pod=exp.mesh == "multi")
+    rules = make_rules(mesh, "train" if shape.kind == "train" else "serve",
+                       flat_dp=cfg.flat_dp)
+    if getattr(run, "seq_shard", False):
+        rules = dataclasses.replace(
+            rules, rules={**rules.rules, "seq_res": (("model",),)}
+        )
+    in_specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer, warmup_cosine())
+        sch = ts.state_schema(cfg, run, opt)
+        state_abs = abstract_params(sch)
+        if run.pipeline_stages > 1 and "pod" in mesh.shape:
+            from repro.runtime.pipeline import build_pipeline_train_step
+
+            fn, _state_specs = build_pipeline_train_step(
+                cfg, run, opt, rules
+            )
+            # shard_map's in_specs drive the pod split; jit-level
+            # shardings are left unspecified for the dry-run lowering
+            jf = jax.jit(fn, donate_argnums=(0,))
+            return cfg, shape, mesh, jf, (state_abs, in_specs)
+        state_sh = ts.state_shardings(sch, rules, run)
+        batch_sh = ts.batch_shardings(in_specs, rules)
+        if run.gradient_compression != "none" and "pod" in mesh.shape:
+            fn = ts.build_compressed_train_step(cfg, run, opt, rules)
+        else:
+            fn = ts.build_train_step(cfg, run, opt, rules)
+        jf = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                     donate_argnums=(0,))
+        return cfg, shape, mesh, jf, (state_abs, in_specs)
+    psch = cast_schema(M.schema(cfg), jax.numpy.bfloat16)
+    params_abs = abstract_params(psch)
+    params_sh = param_shardings(psch, rules)
+    input_sh = serve_step.serve_input_shardings(in_specs, rules)
+    if shape.kind == "prefill":
+        fn = serve_step.build_prefill(cfg, rules)
+        jf = jax.jit(fn, in_shardings=(params_sh, input_sh))
+        return cfg, shape, mesh, jf, (params_abs, in_specs)
+    cache_sch = M.cache_schema(cfg, shape.global_batch, shape.seq_len)
+    fn = serve_step.build_decode(cfg, rules)
+    jf = jax.jit(
+        fn,
+        in_shardings=(params_sh, param_shardings(cache_sch, rules),
+                      input_sh),
+        donate_argnums=(1,),
+    )
+    return cfg, shape, mesh, jf, (
+        params_abs, abstract_params(cache_sch), in_specs
+    )
+
+
+def run_experiment(exp: Experiment) -> dict:
+    cfg, shape, mesh, jf, args = build_variant(exp)
+    chips = mesh.devices.size
+    t0 = time.time()
+    lowered = jf.lower(*args)
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    hc = hlo_analyze(compiled.as_text(), total_devices=chips, pod_size=256)
+    mem = dr._mem_analysis_dict(compiled)
+    rl = roofline_terms(hc["flops"], hc["hbm_bytes"], hc)
+    total, active = M.param_counts(cfg)
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind in ("train", "prefill") else 1
+    )
+    mf = model_flops(active, tokens, train=shape.kind == "train") / chips
+    rec = {
+        "experiment": exp.name,
+        "hypothesis": exp.hypothesis,
+        "arch": exp.arch, "shape": exp.shape, "mesh": exp.mesh,
+        "compile_s": round(t_compile, 1),
+        "hlo_flops_per_dev": hc["flops"],
+        "hlo_bytes_per_dev": hc["hbm_bytes"],
+        "collectives": {
+            "total_bytes": hc["collective_bytes"],
+            "dci_bytes": hc["collective_dci_bytes"],
+            "by_type": hc["collective_by_type"],
+        },
+        "memory": mem,
+        "roofline": rl,
+        "useful_compute_ratio": mf / hc["flops"] if hc["flops"] else 0,
+    }
+    out = ARTIFACTS / f"{exp.arch}.{exp.shape}.{exp.mesh}"
+    out.mkdir(parents=True, exist_ok=True)
+    (out / f"{exp.name}.json").write_text(json.dumps(rec, indent=1))
+    print(
+        f"[perf] {exp.name}: dom={rl['dominant']} "
+        f"T=(c {rl['compute']:.2f} | m {rl['memory']:.2f} | "
+        f"x {rl['collective']:.2f})s frac={rl['roofline_fraction']:.3f} "
+        f"peak={mem.get('peak_bytes_per_device', 0) / 2**30:.1f}GiB",
+        flush=True,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--run", nargs="+", default=None)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list or not args.run:
+        for name, e in EXPERIMENTS.items():
+            print(f"{name}: [{e.arch} × {e.shape} × {e.mesh}] "
+                  f"{e.hypothesis[:90]}")
+        return
+    for name in args.run:
+        run_experiment(EXPERIMENTS[name])
+
+
+if __name__ == "__main__":
+    main()

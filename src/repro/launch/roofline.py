@@ -1,0 +1,53 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), TPU v5e constants from launch/hw.py:
+
+    T_compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    T_memory     = HLO_bytes_per_device / HBM_bw
+    T_collective = ICI_bytes/ (link_bw × links)  +  DCI_bytes / DCI_bw
+
+FLOPs / HBM bytes / collective bytes come from launch/hlo_cost.py — a
+static cost model over the compiled HLO text that (unlike XLA's
+cost_analysis) multiplies while-loop trip counts, recurses into fusions,
+and attributes each collective to ICI vs inter-pod DCI via its replica
+groups.  Collective bytes are *wire-true* per op type (all-reduce counted
+2·size·(g-1)/g etc.), a refinement over the brief's operand-sum
+convention; both conventions land within a small factor and the artifact
+records per-type byte totals so either can be recomputed.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.launch.hw import TPU_V5E, ChipSpec
+
+
+def roofline_terms(
+    flops_per_dev: float,
+    bytes_per_dev: float,
+    hc: dict,
+    *,
+    chip: ChipSpec = TPU_V5E,
+) -> dict[str, Any]:
+    t_comp = flops_per_dev / chip.peak_flops_bf16
+    t_mem = bytes_per_dev / chip.hbm_bw
+    dci = float(hc.get("collective_dci_bytes", 0.0))
+    ici = float(hc.get("collective_bytes", 0.0)) - dci
+    t_ici = ici / (chip.ici_link_bw * chip.ici_links)
+    t_dci = dci / chip.dci_bw
+    t_coll = t_ici + t_dci
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll,
+             "collective_ici": t_ici, "collective_dci": t_dci}
+    dom = max(("compute", "memory", "collective"), key=lambda k: terms[k])
+    bound = max(terms["compute"], terms["memory"], terms["collective"])
+    return {
+        **terms,
+        "dominant": dom,
+        "step_time_lower_bound_s": bound,
+        "roofline_fraction": t_comp / bound if bound > 0 else 0.0,
+    }
+
+
+def model_flops(n_active_params: int, tokens: int, *, train: bool) -> float:
+    """6·N·D for train, 2·N·D for forward-only (MoE: N = active params)."""
+    return (6.0 if train else 2.0) * n_active_params * tokens

@@ -1,0 +1,96 @@
+"""Batched serving driver: prefill + decode loop with a sharded KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.runtime import serve_step
+from repro.sharding.rules import init_params, make_rules
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    mesh = make_host_mesh()
+    rules = make_rules(mesh, "serve")
+    max_seq = args.prompt_len + args.gen
+
+    params = init_params(M.schema(cfg), jax.random.key(0))
+    prefill = jax.jit(serve_step.build_prefill(cfg, rules, max_seq=max_seq))
+    decode = jax.jit(serve_step.build_decode(cfg, rules), donate_argnums=(1,))
+
+    key = jax.random.key(1)
+    B = args.batch
+    inputs = {
+        "tokens": jax.random.randint(
+            key, (B, args.prompt_len), 0, cfg.vocab_size, jnp.int32
+        )
+    }
+    if cfg.input_mode == "embeds":
+        inputs["embeds"] = jax.random.normal(
+            key, (B, args.prompt_len, cfg.d_model), jnp.float32
+        ).astype(jnp.bfloat16)
+    if cfg.rope_type == "mrope":
+        inputs["positions"] = jnp.broadcast_to(
+            jnp.arange(args.prompt_len)[None, None], (B, 3, args.prompt_len)
+        ).astype(jnp.int32)
+    if cfg.cross_attention:
+        inputs["enc_embeds"] = jax.random.normal(
+            key, (B, cfg.encoder_frames, cfg.d_model), jnp.float32
+        ).astype(jnp.bfloat16)
+
+    t0 = time.monotonic()
+    logits, cache = prefill(params, inputs)
+    jax.block_until_ready(logits)
+    t_prefill = time.monotonic() - t0
+
+    def sample(lg, k):
+        if args.temperature <= 0:
+            return jnp.argmax(lg, -1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / args.temperature).astype(
+            jnp.int32
+        )
+
+    toks = [sample(logits, key)]
+    t0 = time.monotonic()
+    for i in range(args.gen - 1):
+        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+        dec_in = {"token": toks[-1], "pos": pos}
+        if cfg.rope_type == "mrope":
+            dec_in["positions"] = jnp.broadcast_to(
+                pos[None, None], (B, 3)
+            ).astype(jnp.int32)
+        logits, cache = decode(params, cache, dec_in)
+        key, sub = jax.random.split(key)
+        toks.append(sample(logits, sub))
+    jax.block_until_ready(toks[-1])
+    t_decode = time.monotonic() - t0
+    out = jnp.stack(toks, axis=1)
+    print(f"[serve] prefill {args.prompt_len} tok × {B}: {t_prefill:.3f}s")
+    print(f"[serve] decode {args.gen - 1} steps: {t_decode:.3f}s "
+          f"({(args.gen - 1) * B / max(t_decode, 1e-9):.1f} tok/s)")
+    print("[serve] sample output ids:", out[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+"""GQA/MHA attention: chunked (flash-style) prefill/train + cached decode.
+
+Two compute layouts, chosen per phase:
+
+* train/prefill: KV heads are broadcast to the full head count so the head
+  dim shards 16-way on "model" (MXU-dense); queries are processed in
+  ``query_chunk`` blocks via lax.scan so the (S, S) score matrix is never
+  materialized — the XLA-level equivalent of flash attention.  The Pallas
+  kernel in kernels/flash_attention is the TPU hot path; this is the
+  portable/sharded formulation the dry-run lowers.
+
+* decode: factored (kv_head, group) layout with the KV cache *sequence*
+  dim sharded on "model" (flash-decode): GQA archs have kv_heads (4-8) <
+  model-parallel degree (16), so head-sharding cannot scale — seq-sharding
+  can.  Softmax/combine over the sharded seq dim lowers to small
+  all-reduces of per-head statistics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope
+from repro.sharding.rules import param, shard, zeros_param
+
+NEG_INF = -1e30
+
+
+def attn_schema(cfg: ModelConfig, cross: bool = False):
+    d, H, KH, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s = {
+        "wq": param((d, H, Dh), ("embed", "heads", "head_dim"), cfg.pdtype),
+        "wk": param((d, KH, Dh), ("embed", "kv_heads", "head_dim"), cfg.pdtype),
+        "wv": param((d, KH, Dh), ("embed", "kv_heads", "head_dim"), cfg.pdtype),
+        "wo": param((H, Dh, d), ("heads", "head_dim", "embed"), cfg.pdtype),
+    }
+    return s
+
+
+def attn_cache_schema(cfg: ModelConfig, batch: int, max_seq: int, long: bool):
+    KH, Dh = cfg.num_kv_heads, cfg.head_dim
+    seq_ax = "kv_seq_long" if long else "kv_seq"
+    axes = ("batch", seq_ax, "kv_heads", "head_dim")
+    return {
+        "k": zeros_param((batch, max_seq, KH, Dh), axes, cfg.cdtype),
+        "v": zeros_param((batch, max_seq, KH, Dh), axes, cfg.cdtype),
+    }
+
+
+def _softcap(scores: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def chunked_attention(
+    q: jax.Array,           # (B, Sq, H, Dh)
+    k: jax.Array,           # (B, Sk, KH, Dh)
+    v: jax.Array,
+    *,
+    query_chunk: int,
+    causal: bool,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Exact attention, scanned over query chunks (per-chunk full softmax)."""
+    B, Sq, H, Dh = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    rep = H // KH
+    scale = Dh ** -0.5
+    if rep > 1:
+        # broadcast KV heads so the full H dim shards on "model"
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+    kpos = jnp.arange(Sk)
+
+    def one_chunk(q_chunk: jax.Array, q_start: jax.Array) -> jax.Array:
+        # q_chunk (B, C, H, Dh)
+        C = q_chunk.shape[1]
+        scores = jnp.einsum(
+            "bqhd,bkhd->bhqk", q_chunk, k, preferred_element_type=jnp.float32
+        ) * scale
+        scores = _softcap(scores, softcap)
+        if causal:
+            qpos = q_start + jnp.arange(C)
+            mask = kpos[None, :] <= qpos[:, None]
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q_chunk.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        return shard(out, "batch", None, "heads", None)
+
+    if Sq <= query_chunk:
+        return one_chunk(q, jnp.asarray(0, jnp.int32))
+
+    pad = (-Sq) % query_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (Sq + pad) // query_chunk
+    qs = jnp.moveaxis(q.reshape(B, nc, query_chunk, H, Dh), 1, 0)
+
+    def body(_, inp):
+        i, q_chunk = inp
+        return None, one_chunk(q_chunk, i * query_chunk)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nc), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq + pad, H, Dv)
+    return out[:, :Sq] if pad else out
+
+
+def apply_attn_full(
+    cfg: ModelConfig,
+    p,
+    x: jax.Array,                 # (B, S, d)
+    *,
+    rope_cs=None,                 # (cos, sin) broadcastable to (B?,S,1,D/2)
+    causal: bool = True,
+    return_cache: bool = False,
+    long: bool = False,
+):
+    """Train / prefill attention over a full sequence."""
+    dt = cfg.cdtype
+    x = x.astype(dt)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    kk = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    vv = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    q = shard(q, "batch", None, "heads", None)
+    if rope_cs is not None:
+        cos, sin = rope_cs
+        q = apply_rope(q, cos, sin)
+        kk = apply_rope(kk, cos, sin)
+    out = chunked_attention(
+        q, kk, vv,
+        query_chunk=cfg.query_chunk,
+        causal=causal,
+        softcap=cfg.attn_logit_softcap,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    y = shard(y, "batch", None, "d_model")
+    if return_cache:
+        seq_ax = "kv_seq_long" if long else "kv_seq"
+        cache = {
+            "k": shard(kk, "batch", seq_ax, "kv_heads", None),
+            "v": shard(vv, "batch", seq_ax, "kv_heads", None),
+        }
+        return y, cache
+    return y, None
+
+
+def apply_attn_decode(
+    cfg: ModelConfig,
+    p,
+    x: jax.Array,                 # (B, d) single new token
+    cache,                        # {"k","v"}: (B, Smax, KH, Dh)
+    pos: jax.Array,               # () int32 current position
+    *,
+    rope_cs=None,                 # cos/sin for the single position
+    long: bool = False,
+):
+    dt = cfg.cdtype
+    B = x.shape[0]
+    H, KH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    rep = H // KH
+    x = x.astype(dt)
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"].astype(dt))
+    k_new = jnp.einsum("bd,dhk->bhk", x, p["wk"].astype(dt))
+    v_new = jnp.einsum("bd,dhk->bhk", x, p["wv"].astype(dt))
+    if rope_cs is not None:
+        cos, sin = rope_cs  # (1 or B, 1, D/2)
+        q = apply_rope(q[:, None], cos, sin)[:, 0]
+        k_new = apply_rope(k_new[:, None], cos, sin)[:, 0]
+    seq_ax = "kv_seq_long" if long else "kv_seq"
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new[:, None], pos, axis=1
+    )
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new[:, None], pos, axis=1
+    )
+    k = shard(k, "batch", seq_ax, "kv_heads", None)
+    v = shard(v, "batch", seq_ax, "kv_heads", None)
+    Smax = k.shape[1]
+    # factored GQA decode: q (B, KH, rep, Dh) vs seq-sharded cache
+    qf = q.reshape(B, KH, rep, Dh)
+    scores = jnp.einsum(
+        "bgrd,bsgd->bgrs", qf, k, preferred_element_type=jnp.float32
+    ) * (Dh ** -0.5)
+    scores = _softcap(scores, cfg.attn_logit_softcap)
+    valid = jnp.arange(Smax) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    ctx = jnp.einsum("bgrs,bsgd->bgrd", probs, v).reshape(B, H, Dh)
+    y = jnp.einsum("bhk,hkd->bd", ctx, p["wo"].astype(dt))
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_cache_schema(cfg: ModelConfig, batch: int):
+    KH, Dh, F = cfg.num_kv_heads, cfg.head_dim, cfg.encoder_frames
+    axes = ("batch", "frames", "kv_heads", "head_dim")
+    return {
+        "k": zeros_param((batch, F, KH, Dh), axes, cfg.cdtype),
+        "v": zeros_param((batch, F, KH, Dh), axes, cfg.cdtype),
+    }
+
+
+def cross_kv(cfg: ModelConfig, p, enc_out: jax.Array):
+    dt = cfg.cdtype
+    e = enc_out.astype(dt)
+    k = jnp.einsum("bfd,dhk->bfhk", e, p["wk"].astype(dt))
+    v = jnp.einsum("bfd,dhk->bfhk", e, p["wv"].astype(dt))
+    return {"k": k, "v": v}
+
+
+def apply_cross_attn(
+    cfg: ModelConfig,
+    p,
+    x: jax.Array,                 # (B, S, d) or (B, d)
+    kv,                           # cross-KV cache {"k","v"} (B, F, KH, Dh)
+):
+    dt = cfg.cdtype
+    single = x.ndim == 2
+    if single:
+        x = x[:, None]
+    x = x.astype(dt)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    q = shard(q, "batch", None, "heads", None)
+    out = chunked_attention(
+        q, kv["k"], kv["v"], query_chunk=cfg.query_chunk, causal=False,
+        softcap=cfg.attn_logit_softcap,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return y[:, 0] if single else y

@@ -1,0 +1,29 @@
+"""Whisper-style encoder (conv frontend stubbed to frame embeddings)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockDef, ModelConfig
+from repro.models.layers import apply_norm, norm_schema, sinusoidal_positions
+from repro.models.transformer import apply_block_full, block_schema
+
+
+def encoder_schema(cfg: ModelConfig):
+    bdef = BlockDef(pattern=(("attn", "dense"),), repeat=cfg.encoder_layers)
+    return {
+        "blocks": block_schema(cfg, bdef),
+        "final_norm": norm_schema(cfg),
+    }
+
+
+def apply_encoder(cfg: ModelConfig, p, enc_embeds: jax.Array) -> jax.Array:
+    """enc_embeds (B, F, d) stub frame embeddings -> encoder states."""
+    bdef = BlockDef(pattern=(("attn", "dense"),), repeat=cfg.encoder_layers)
+    F = enc_embeds.shape[1]
+    x = enc_embeds.astype(cfg.cdtype)
+    x = x + sinusoidal_positions(F, cfg.d_model).astype(cfg.cdtype)
+    x, _, _ = apply_block_full(
+        cfg, bdef, p["blocks"], x, rope_cs=None, causal=False,
+    )
+    return apply_norm(cfg, p["final_norm"], x)

@@ -1,0 +1,167 @@
+"""Shared layers: norms, MLPs, rotary embeddings (incl. M-RoPE), embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import normal_param, param, scale_param, shard
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_schema(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {
+            "scale": scale_param((d,), ("d_model",), cfg.pdtype),
+            "bias": normal_param((d,), ("d_model",), 0.0, cfg.pdtype),
+        }
+    return {"scale": scale_param((d,), ("d_model",), cfg.pdtype)}
+
+
+def apply_norm(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU / squared-ReLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_schema(cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    s = {"down": param((f, d), ("mlp", "embed"), cfg.pdtype)}
+    if cfg.mlp_act == "swiglu":
+        s["gate"] = param((d, f), ("embed", "mlp"), cfg.pdtype)
+        s["up"] = param((d, f), ("embed", "mlp"), cfg.pdtype)
+    else:
+        s["up"] = param((d, f), ("embed", "mlp"), cfg.pdtype)
+    return s
+
+
+def apply_mlp(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    dt = cfg.cdtype
+    x = x.astype(dt)
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(x @ p["gate"].astype(dt)) * (x @ p["up"].astype(dt))
+    elif cfg.mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["up"].astype(dt)))
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["up"].astype(dt), approximate=True)
+    h = shard(h, "batch", *(None,) * (h.ndim - 2), "mlp")
+    return h @ p["down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE) and sinusoidal absolute positions
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def rope_cos_sin(positions: jax.Array, dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., dim/2), float32."""
+    freqs = rope_freqs(dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _mrope_select(ang: jax.Array, sections) -> jax.Array:
+    """ang (B,3,S,D2) -> (B,S,D2) picking t/h/w section per freq index."""
+    secs = np.asarray(sections)
+    sel = jnp.asarray(np.repeat(np.arange(3), secs))  # (D2,)
+    onehot = jax.nn.one_hot(sel, 3, dtype=ang.dtype)  # (D2, 3)
+    return jnp.einsum("bksd,dk->bsd", ang, onehot)
+
+
+def mrope_cos_sin(positions: jax.Array, dim: int, theta: float, sections):
+    """M-RoPE (Qwen2-VL): positions (B, 3, S) -> cos/sin (B, S, dim/2);
+    rotary freq indices are split into temporal/height/width sections
+    (half-dim units summing to dim/2), each driven by its own position row.
+    """
+    assert int(np.sum(np.asarray(sections))) == dim // 2, (sections, dim)
+    freqs = rope_freqs(dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B,3,S,D2)
+    ang = _mrope_select(ang, sections)  # (B,S,D2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, D); cos/sin broadcastable to (..., S, 1, D/2).
+
+    Uses the llama 'rotate-half' convention on (even, odd) pairs split as
+    first/second halves.
+    """
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out1 = xf1 * cos - xf2 * sin
+    out2 = xf2 * cos + xf1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal table (n, d), float32."""
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    inv = np.exp(-np.log(10000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_schema(cfg: ModelConfig):
+    s = {}
+    V, d = cfg.vocab_size, cfg.d_model
+    # embeds-mode (VLM) still needs the token table: text tokens at decode
+    s["embed"] = normal_param((V, d), ("vocab", "d_model"), 0.02, cfg.pdtype)
+    if not cfg.tie_embeddings:
+        s["unembed"] = normal_param(
+            (d, V), ("d_model", "vocab"), 0.02, cfg.pdtype
+        )
+    return s
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["embed"], tokens, axis=0)
+    return x.astype(cfg.cdtype)
+
+
+def unembed(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    """x (..., d) -> logits (..., V), fp32, vocab-sharded."""
+    if cfg.tie_embeddings:
+        w = p["embed"].astype(cfg.cdtype).T
+    else:
+        w = p["unembed"].astype(cfg.cdtype)
+    logits = (x.astype(cfg.cdtype) @ w).astype(jnp.float32)
+    return logits

@@ -1,0 +1,174 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Train/prefill use the expanded (non-absorbed) form — compute-optimal for
+long sequences and MXU-dense (128 full heads shard 16-way on "model").
+Decode uses the *absorbed* form against the compressed latent cache
+(c_kv: kv_lora_rank + shared rope head): per-token work contracts through
+the 512-dim latent instead of 128 heads × 192 dims, and the cache is
+~14x smaller than GQA-equivalent KV — this is MLA's contribution and the
+reason deepseek decode cells are memory-light in the roofline table.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import NEG_INF, chunked_attention
+from repro.models.layers import apply_rope, rms_norm
+from repro.sharding.rules import param, scale_param, shard, zeros_param
+
+
+def mla_schema(cfg: ModelConfig):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    s = {}
+    if m.q_lora_rank:
+        s["wq_a"] = param((d, m.q_lora_rank), ("embed", "q_lora"), cfg.pdtype)
+        s["q_norm"] = scale_param((m.q_lora_rank,), ("q_lora",), cfg.pdtype)
+        s["wq_b"] = param(
+            (m.q_lora_rank, H, qk), ("q_lora", "heads", "head_dim"), cfg.pdtype
+        )
+    else:
+        s["wq"] = param((d, H, qk), ("embed", "heads", "head_dim"), cfg.pdtype)
+    s["wkv_a"] = param(
+        (d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", "kv_lora"),
+        cfg.pdtype,
+    )
+    s["kv_norm"] = scale_param((m.kv_lora_rank,), ("kv_lora",), cfg.pdtype)
+    s["wkv_b"] = param(
+        (m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim),
+        ("kv_lora", "heads", "head_dim"), cfg.pdtype,
+    )
+    s["wo"] = param(
+        (H, m.v_head_dim, d), ("heads", "head_dim", "embed"), cfg.pdtype
+    )
+    return s
+
+
+def mla_cache_schema(cfg: ModelConfig, batch: int, max_seq: int, long: bool):
+    m = cfg.mla
+    seq_ax = "kv_seq_long" if long else "kv_seq"
+    return {
+        "ckv": zeros_param(
+            (batch, max_seq, m.kv_lora_rank), ("batch", seq_ax, "kv_lora"),
+            cfg.cdtype,
+        ),
+        "kpe": zeros_param(
+            (batch, max_seq, m.qk_rope_head_dim), ("batch", seq_ax, "rope"),
+            cfg.cdtype,
+        ),
+    }
+
+
+def _project_q(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    dt = cfg.cdtype
+    m = cfg.mla
+    if m.q_lora_rank:
+        qa = x @ p["wq_a"].astype(dt)
+        qa = rms_norm(qa, p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("...r,rhk->...hk", qa, p["wq_b"].astype(dt))
+    else:
+        q = jnp.einsum("...d,dhk->...hk", x, p["wq"].astype(dt))
+    return q  # (..., H, nope+rope)
+
+
+def apply_mla_full(
+    cfg: ModelConfig,
+    p,
+    x: jax.Array,                  # (B, S, d)
+    *,
+    rope_cs,                       # (cos, sin) for positions (S,)
+    causal: bool = True,
+    return_cache: bool = False,
+    long: bool = False,
+):
+    dt = cfg.cdtype
+    m = cfg.mla
+    x = x.astype(dt)
+    q = _project_q(cfg, p, x)      # (B,S,H,nope+rope)
+    q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    kv_a = x @ p["wkv_a"].astype(dt)          # (B,S,kv_lora+rope)
+    ckv = rms_norm(kv_a[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_pe = kv_a[..., m.kv_lora_rank:]         # (B,S,rope) shared head
+    cos, sin = rope_cs
+    q_pe = apply_rope(q_pe, cos, sin)
+    k_pe = apply_rope(k_pe[:, :, None], cos, sin)[:, :, 0]
+    kv = jnp.einsum("bsr,rhk->bshk", ckv, p["wkv_b"].astype(dt))
+    k_nope = kv[..., : m.qk_nope_head_dim]
+    v = kv[..., m.qk_nope_head_dim:]          # (B,S,H,v_dim)
+    H = cfg.num_heads
+    k_pe_h = jnp.broadcast_to(
+        k_pe[:, :, None], (*k_pe.shape[:2], H, m.qk_rope_head_dim)
+    )
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_pe_h], axis=-1)
+    q_full = shard(q_full, "batch", None, "heads", None)
+    k_full = shard(k_full, "batch", None, "heads", None)
+    # pad v to qk dim? no — chunked_attention handles mismatched v dim via
+    # separate einsum; here KH == H so rep == 1 and v dim is independent.
+    out = chunked_attention(
+        q_full, k_full, v,
+        query_chunk=cfg.query_chunk, causal=causal,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    y = shard(y, "batch", None, "d_model")
+    if return_cache:
+        seq_ax = "kv_seq_long" if long else "kv_seq"
+        cache = {
+            "ckv": shard(ckv, "batch", seq_ax, None),
+            "kpe": shard(k_pe, "batch", seq_ax, None),
+        }
+        return y, cache
+    return y, None
+
+
+def apply_mla_decode(
+    cfg: ModelConfig,
+    p,
+    x: jax.Array,                  # (B, d)
+    cache,                         # {"ckv": (B,Smax,R), "kpe": (B,Smax,rope)}
+    pos: jax.Array,
+    *,
+    rope_cs,
+    long: bool = False,
+):
+    dt = cfg.cdtype
+    m = cfg.mla
+    x = x.astype(dt)
+    H = cfg.num_heads
+    q = _project_q(cfg, p, x)      # (B,H,nope+rope)
+    q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    cos, sin = rope_cs
+    q_pe = apply_rope(q_pe[:, None], cos, sin)[:, 0]
+    kv_a = x @ p["wkv_a"].astype(dt)
+    ckv_new = rms_norm(kv_a[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    kpe_new = apply_rope(kv_a[:, None, m.kv_lora_rank:], cos, sin)[:, 0]
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new[:, None], pos, axis=1
+    )
+    kpe = jax.lax.dynamic_update_slice_in_dim(
+        cache["kpe"], kpe_new[:, None], pos, axis=1
+    )
+    seq_ax = "kv_seq_long" if long else "kv_seq"
+    ckv = shard(ckv, "batch", seq_ax, None)
+    kpe = shard(kpe, "batch", seq_ax, None)
+    # absorbed attention in latent space
+    w_uk = p["wkv_b"][..., : m.qk_nope_head_dim].astype(dt)   # (R,H,nope)
+    w_uv = p["wkv_b"][..., m.qk_nope_head_dim:].astype(dt)    # (R,H,v)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)          # (B,H,R)
+    scores = (
+        jnp.einsum("bhr,bsr->bhs", q_lat, ckv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bhk,bsk->bhs", q_pe, kpe,
+                     preferred_element_type=jnp.float32)
+    ) * ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+    Smax = ckv.shape[1]
+    valid = jnp.arange(Smax) <= pos
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv)          # (B,H,R)
+    ctx = jnp.einsum("bhr,rhv->bhv", ctx_lat, w_uv)           # (B,H,v)
+    y = jnp.einsum("bhv,hvd->bd", ctx, p["wo"].astype(dt))
+    return y, {"ckv": ckv, "kpe": kpe}

@@ -1,0 +1,325 @@
+"""Public model API: schema / loss / prefill / decode for every arch.
+
+All functions are pure and jit-friendly; params/caches are plain pytrees
+described by ParamSpec schemas (sharding/rules.py), so the same code path
+serves CPU smoke tests, the 256-chip dry-run and elastic re-meshes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec
+from repro.models.layers import (
+    apply_norm,
+    embed_schema,
+    embed_tokens,
+    mrope_cos_sin,
+    norm_schema,
+    rope_cos_sin,
+    sinusoidal_positions,
+    unembed,
+)
+from repro.models.transformer import (
+    apply_block_decode,
+    apply_block_full,
+    apply_layer_full,
+    block_cache_schema,
+    block_schema,
+    layer_schema,
+)
+from repro.sharding.rules import count_params, param, shard
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+
+
+def schema(cfg: ModelConfig):
+    s: dict[str, Any] = dict(embed_schema(cfg))
+    cross = cfg.cross_attention
+    for i, bdef in enumerate(cfg.blocks):
+        s[f"b{i}"] = block_schema(cfg, bdef, cross=cross)
+    s["final_norm"] = norm_schema(cfg)
+    if cfg.encoder_layers:
+        s["encoder"] = encdec.encoder_schema(cfg)
+    if cfg.mtp:
+        mixer = "mla" if cfg.mla is not None else "attn"
+        s["mtp"] = {
+            "norm_h": norm_schema(cfg),
+            "norm_e": norm_schema(cfg),
+            "proj": param(
+                (2 * cfg.d_model, cfg.d_model), (None, "d_model"), cfg.pdtype
+            ),
+            "layer": layer_schema(cfg, mixer, "dense"),
+            "final_norm": norm_schema(cfg),
+        }
+    return s
+
+
+def cache_schema(cfg: ModelConfig, batch: int, max_seq: int):
+    long = batch < 8  # batch-1 long-context cells shard cache over data+model
+    return {
+        f"b{i}": block_cache_schema(
+            cfg, bdef, batch, max_seq, long, cross=cfg.cross_attention
+        )
+        for i, bdef in enumerate(cfg.blocks)
+    }
+
+
+def param_counts(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active) parameter counts."""
+    total = count_params(schema(cfg))
+    active = total
+    if cfg.moe is not None:
+        m = cfg.moe
+        n_moe_layers = sum(
+            b.repeat * sum(1 for _, mlp in b.pattern if mlp == "moe")
+            for b in cfg.blocks
+        )
+        per_expert = 3 * cfg.d_model * m.d_ff
+        active -= n_moe_layers * per_expert * (m.num_experts - m.top_k)
+    return total, active
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _rope_dim(cfg: ModelConfig) -> int:
+    if cfg.mla is not None:
+        return cfg.mla.qk_rope_head_dim
+    return cfg.head_dim
+
+
+def rope_full(cfg: ModelConfig, S: int, positions=None):
+    """cos/sin for a full sequence, shaped to broadcast with (B,S,H,D)."""
+    if cfg.rope_type == "none":
+        return None
+    dim = _rope_dim(cfg)
+    if cfg.rope_type == "mrope":
+        cos, sin = mrope_cos_sin(positions, dim, cfg.rope_theta,
+                                 cfg.mrope_sections)        # (B,S,D2)
+        return cos[:, :, None, :], sin[:, :, None, :]
+    pos = jnp.arange(S) if positions is None else positions
+    cos, sin = rope_cos_sin(pos, dim, cfg.rope_theta)       # (S,D2)
+    return cos[None, :, None, :], sin[None, :, None, :]
+
+
+def rope_decode(cfg: ModelConfig, pos, positions=None):
+    if cfg.rope_type == "none":
+        return None
+    dim = _rope_dim(cfg)
+    if cfg.rope_type == "mrope":
+        cos, sin = mrope_cos_sin(positions[:, :, None], dim, cfg.rope_theta,
+                                 cfg.mrope_sections)        # (B,1,D2)
+        return cos[:, :, None, :], sin[:, :, None, :]       # (B,1,1,D2)
+    cos, sin = rope_cos_sin(pos[None], dim, cfg.rope_theta)  # (1,D2)
+    return cos[None], sin[None]                              # (1,1,D2)
+
+
+def _inputs_to_x(cfg: ModelConfig, params, batch_inputs, S: int):
+    if cfg.input_mode == "embeds" and "embeds" in batch_inputs:
+        x = batch_inputs["embeds"].astype(cfg.cdtype)
+    else:
+        x = embed_tokens(cfg, params, batch_inputs["tokens"])
+    if cfg.pos_embed == "sinusoidal":
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(cfg.cdtype)
+    return shard(x, "batch", "seq_res", "d_model")
+
+
+def backbone_full(
+    cfg: ModelConfig, params, x, *, rope_cs, return_cache=False, long=False,
+    enc_out=None, remat: str | None = None,
+):
+    aux = jnp.zeros((), jnp.float32)
+    caches = {}
+    for i, bdef in enumerate(cfg.blocks):
+        x, c, a = apply_block_full(
+            cfg, bdef, params[f"b{i}"], x,
+            rope_cs=rope_cs, causal=True, return_cache=return_cache,
+            long=long, enc_out=enc_out, remat=remat,
+        )
+        caches[f"b{i}"] = c
+        aux = aux + a
+    return x, (caches if return_cache else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+
+def chunked_xent(
+    cfg: ModelConfig, params, h: jax.Array, labels: jax.Array,
+    mask: jax.Array, loss_chunk: int = 512,
+):
+    """Memory-bounded cross-entropy: scan over sequence chunks so the
+    (tokens, vocab) fp32 logits never materialize at once.  Returns
+    (sum_nll, sum_mask)."""
+    B, S, d = h.shape
+
+    def piece(h_c, lab_c, m_c):
+        logits = unembed(cfg, params, h_c)                   # (B,c,V) fp32
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(
+            logits, lab_c[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        return jnp.sum((lse - lab) * m_c), jnp.sum(m_c)
+
+    if S <= loss_chunk:
+        return piece(h, labels, mask)
+    assert S % loss_chunk == 0, (S, loss_chunk)
+    nc = S // loss_chunk
+    hs = jnp.moveaxis(h.reshape(B, nc, loss_chunk, d), 1, 0)
+    # keep the batch dim sharded through the chunk scan — without the
+    # constraint GSPMD replicates the full (B,S,d) hidden per device
+    hs = shard(hs, None, "batch", None, None)
+    ls = jnp.moveaxis(labels.reshape(B, nc, loss_chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, nc, loss_chunk), 1, 0)
+    ls = shard(ls, None, "batch", None)
+    ms = shard(ms, None, "batch", None)
+
+    def body(acc, inp):
+        nll, cnt = piece(*inp)
+        return (acc[0] + nll, acc[1] + cnt), None
+
+    (nll, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (hs, ls, ms))
+    return nll, cnt
+
+
+def _shift_left(x: jax.Array, n: int = 1):
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, n)
+    return jnp.pad(x[:, n:], pad)
+
+
+def loss_fn(
+    cfg: ModelConfig, params, batch, *, loss_chunk: int = 512,
+    remat: str | None = None,
+):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    x = _inputs_to_x(cfg, params, batch, S)
+    rope_cs = rope_full(cfg, S, batch.get("positions"))
+    enc_out = None
+    if cfg.cross_attention:
+        enc_out = encdec.apply_encoder(cfg, params["encoder"],
+                                       batch["enc_embeds"])
+    h, _, aux = backbone_full(
+        cfg, params, x, rope_cs=rope_cs, enc_out=enc_out, remat=remat,
+    )
+    h = apply_norm(cfg, params["final_norm"], h)
+    labels = _shift_left(tokens)
+    lmask = _shift_left(mask)
+    nll, cnt = chunked_xent(cfg, params, h, labels, lmask, loss_chunk)
+    metrics = {"nll_sum": nll, "token_count": cnt, "aux_loss": aux}
+    loss = nll / jnp.maximum(cnt, 1.0) + aux
+
+    if cfg.mtp:
+        mp = params["mtp"]
+        e_next = embed_tokens(cfg, params, _shift_left(tokens))
+        x_mtp = jnp.concatenate(
+            [apply_norm(cfg, mp["norm_h"], h),
+             apply_norm(cfg, mp["norm_e"], e_next)], axis=-1
+        ) @ mp["proj"].astype(cfg.cdtype)
+        mixer = "mla" if cfg.mla is not None else "attn"
+        x_mtp, _, _ = apply_layer_full(
+            cfg, mp["layer"], x_mtp, mixer, "dense", rope_cs=rope_cs,
+        )
+        h_mtp = apply_norm(cfg, mp["final_norm"], x_mtp)
+        labels2 = _shift_left(tokens, 2)
+        lmask2 = _shift_left(mask, 2)
+        nll2, cnt2 = chunked_xent(cfg, params, h_mtp, labels2, lmask2,
+                                  loss_chunk)
+        mtp_loss = nll2 / jnp.maximum(cnt2, 1.0)
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + cfg.mtp_weight * mtp_loss
+
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params, inputs, max_seq: int | None = None):
+    """inputs: tokens/embeds (+positions/enc_embeds).  Returns
+    (last_token_logits (B,V) fp32, cache)."""
+    if cfg.input_mode == "embeds" and "embeds" in inputs:
+        B, S = inputs["embeds"].shape[:2]
+    else:
+        B, S = inputs["tokens"].shape
+    long = B < 8
+    x = _inputs_to_x(cfg, params, inputs, S)
+    rope_cs = rope_full(cfg, S, inputs.get("positions"))
+    enc_out = None
+    if cfg.cross_attention:
+        enc_out = encdec.apply_encoder(cfg, params["encoder"],
+                                       inputs["enc_embeds"])
+    h, caches, _ = backbone_full(
+        cfg, params, x, rope_cs=rope_cs, return_cache=True, long=long,
+        enc_out=enc_out, remat="none",
+    )
+    h_last = apply_norm(cfg, params["final_norm"], h[:, -1])
+    logits = unembed(cfg, params, h_last)
+    if max_seq is not None and max_seq != S:
+        from repro.sharding.rules import abstract_params
+
+        target = abstract_params(cache_schema(cfg, B, max_seq))
+        caches = pad_cache_to(caches, target)
+    return logits, caches
+
+
+def pad_cache_to(cache, target_abstract):
+    """Zero-pad prefill caches out to the decode max_seq layout."""
+
+    def pad(x, t):
+        pads = [(0, ts - xs) for xs, ts in zip(x.shape, t.shape)]
+        if any(p[1] for p in pads):
+            return jnp.pad(x, pads)
+        return x
+
+    return jax.tree.map(pad, cache, target_abstract)
+
+
+def decode_step(cfg: ModelConfig, params, cache, inputs):
+    """inputs: token (B,), pos (), [positions (B,3)].  Returns
+    (logits (B,V) fp32, new_cache)."""
+    token, pos = inputs["token"], inputs["pos"]
+    B = token.shape[0]
+    # infer long-context layout from the cache itself
+    long = B < 8
+    x = embed_tokens(cfg, params, token)
+    if cfg.pos_embed == "sinusoidal":
+        # table lookup at dynamic position
+        max_seq = _cache_max_seq(cfg, cache)
+        tab = sinusoidal_positions(max_seq, cfg.d_model).astype(cfg.cdtype)
+        x = x + jax.lax.dynamic_index_in_dim(tab, pos, keepdims=False)
+    rope_cs = rope_decode(cfg, pos, inputs.get("positions"))
+    new_cache = {}
+    for i, bdef in enumerate(cfg.blocks):
+        x, nc = apply_block_decode(
+            cfg, bdef, params[f"b{i}"], x, cache[f"b{i}"], pos,
+            rope_cs=rope_cs, long=long,
+        )
+        new_cache[f"b{i}"] = nc
+    h = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params, h)
+    return logits, new_cache
+
+
+def _cache_max_seq(cfg: ModelConfig, cache) -> int:
+    # self-attention K cache: (layers, B, S, KH, Dh) / MLA ckv (layers, B, S, R)
+    leaves = jax.tree.leaves(cache["b0"])
+    return max(l.shape[2] for l in leaves if l.ndim >= 3)

@@ -1,0 +1,244 @@
+"""Decoder stack: scan-over-layers blocks, hybrid patterns, MTP.
+
+Layers are grouped into BlockDefs (config); each group's params are
+stacked on a leading "layers" dim and the group is applied with lax.scan —
+HLO stays O(pattern) instead of O(num_layers), which keeps 61-80 layer
+dry-run compiles fast and is remat/sharding friendly (the MaxText trick).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockDef, ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import apply_mlp, apply_norm, mlp_schema, norm_schema
+from repro.sharding.rules import shard, stack_schema
+
+
+def remat_wrap(cfg: ModelConfig, fn, override: str | None = None):
+    mode = override if override is not None else cfg.remat
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# One layer
+# ---------------------------------------------------------------------------
+
+
+def layer_schema(cfg: ModelConfig, mixer: str, mlp: str, cross: bool = False):
+    s: dict[str, Any] = {"norm1": norm_schema(cfg)}
+    if mixer == "attn":
+        s["mixer"] = attn.attn_schema(cfg)
+    elif mixer == "mla":
+        s["mixer"] = mla_mod.mla_schema(cfg)
+    elif mixer == "mamba":
+        s["mixer"] = mamba2.mamba_schema(cfg)
+    else:
+        raise ValueError(mixer)
+    if cross:
+        s["norm_x"] = norm_schema(cfg)
+        s["cross"] = attn.attn_schema(cfg)
+    if mlp == "dense":
+        s["norm2"] = norm_schema(cfg)
+        s["mlp"] = mlp_schema(cfg)
+    elif mlp == "moe":
+        s["norm2"] = norm_schema(cfg)
+        s["mlp"] = moe_mod.moe_schema(cfg)
+    elif mlp != "none":
+        raise ValueError(mlp)
+    return s
+
+
+def layer_cache_schema(
+    cfg: ModelConfig, mixer: str, batch: int, max_seq: int, long: bool,
+    cross: bool = False,
+):
+    c: dict[str, Any] = {}
+    if mixer == "attn":
+        c["mixer"] = attn.attn_cache_schema(cfg, batch, max_seq, long)
+    elif mixer == "mla":
+        c["mixer"] = mla_mod.mla_cache_schema(cfg, batch, max_seq, long)
+    elif mixer == "mamba":
+        c["mixer"] = mamba2.mamba_cache_schema(cfg, batch)
+    if cross:
+        c["cross"] = attn.cross_cache_schema(cfg, batch)
+    return c
+
+
+def apply_layer_full(
+    cfg: ModelConfig, p, x, mixer: str, mlp: str, *,
+    rope_cs, causal=True, return_cache=False, long=False, enc_out=None,
+):
+    """Train/prefill layer.  x (B,S,d)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["norm1"], x)
+    cache: dict[str, Any] = {}
+    if mixer == "attn":
+        y, c = attn.apply_attn_full(
+            cfg, p["mixer"], h, rope_cs=rope_cs, causal=causal,
+            return_cache=return_cache, long=long,
+        )
+    elif mixer == "mla":
+        y, c = mla_mod.apply_mla_full(
+            cfg, p["mixer"], h, rope_cs=rope_cs, causal=causal,
+            return_cache=return_cache, long=long,
+        )
+    else:
+        y, c = mamba2.apply_mamba_full(
+            cfg, p["mixer"], h, return_cache=return_cache,
+        )
+    if return_cache:
+        cache["mixer"] = c
+    x = x + y.astype(x.dtype)
+    if "cross" in p:
+        hx = apply_norm(cfg, p["norm_x"], x)
+        kv = attn.cross_kv(cfg, p["cross"], enc_out)
+        if return_cache:
+            cache["cross"] = kv
+        x = x + attn.apply_cross_attn(cfg, p["cross"], hx, kv).astype(x.dtype)
+    if mlp != "none":
+        h2 = apply_norm(cfg, p["norm2"], x)
+        if mlp == "moe":
+            y2, moe_aux = moe_mod.apply_moe(cfg, p["mlp"], h2)
+            aux = aux + moe_aux["lb_loss"] + moe_aux["z_loss"]
+        else:
+            y2 = apply_mlp(cfg, p["mlp"], h2)
+        x = x + y2.astype(x.dtype)
+    x = shard(x, "batch", "seq_res", "d_model")
+    return x, cache, aux
+
+
+def apply_layer_decode(
+    cfg: ModelConfig, p, x, cache, pos, mixer: str, mlp: str, *,
+    rope_cs, long=False,
+):
+    """Decode layer.  x (B,d)."""
+    h = apply_norm(cfg, p["norm1"], x)
+    if mixer == "attn":
+        y, c = attn.apply_attn_decode(
+            cfg, p["mixer"], h, cache["mixer"], pos, rope_cs=rope_cs, long=long,
+        )
+    elif mixer == "mla":
+        y, c = mla_mod.apply_mla_decode(
+            cfg, p["mixer"], h, cache["mixer"], pos, rope_cs=rope_cs, long=long,
+        )
+    else:
+        y, c = mamba2.apply_mamba_decode(cfg, p["mixer"], h, cache["mixer"])
+    new_cache = {"mixer": c}
+    x = x + y.astype(x.dtype)
+    if "cross" in p:
+        hx = apply_norm(cfg, p["norm_x"], x)
+        kv = cache["cross"]
+        new_cache["cross"] = kv
+        x = x + attn.apply_cross_attn(cfg, p["cross"], hx, kv).astype(x.dtype)
+    if mlp != "none":
+        h2 = apply_norm(cfg, p["norm2"], x)
+        if mlp == "moe":
+            y2, _ = moe_mod.apply_moe(cfg, p["mlp"], h2[:, None])
+            y2 = y2[:, 0]
+        else:
+            y2 = apply_mlp(cfg, p["mlp"], h2)
+        x = x + y2.astype(x.dtype)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Block groups (scan over stacked layers)
+# ---------------------------------------------------------------------------
+
+
+def block_schema(cfg: ModelConfig, bdef: BlockDef, cross: bool = False):
+    unit = {
+        f"l{i}": layer_schema(cfg, mixer, mlp, cross=cross)
+        for i, (mixer, mlp) in enumerate(bdef.pattern)
+    }
+    return stack_schema(unit, bdef.repeat)
+
+
+def block_cache_schema(
+    cfg: ModelConfig, bdef: BlockDef, batch: int, max_seq: int, long: bool,
+    cross: bool = False,
+):
+    unit = {
+        f"l{i}": layer_cache_schema(cfg, mixer, batch, max_seq, long, cross)
+        for i, (mixer, _) in enumerate(bdef.pattern)
+    }
+    return stack_schema(unit, bdef.repeat, axis_name="layers")
+
+
+def apply_block_full(
+    cfg: ModelConfig, bdef: BlockDef, params, x, *,
+    rope_cs, causal=True, return_cache=False, long=False, enc_out=None,
+    remat: str | None = None,
+):
+    """x (B,S,d) -> (x, stacked_caches|None, aux)."""
+
+    def body(carry, layer_params):
+        x, aux = carry
+        caches = {}
+        for i, (mixer, mlp) in enumerate(bdef.pattern):
+            x, c, a = apply_layer_full(
+                cfg, layer_params[f"l{i}"], x, mixer, mlp,
+                rope_cs=rope_cs, causal=causal,
+                return_cache=return_cache, long=long, enc_out=enc_out,
+            )
+            caches[f"l{i}"] = c
+            aux = aux + a
+        return (x, aux), caches
+
+    body = remat_wrap(cfg, body, remat)
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params
+    )
+    return x, (caches if return_cache else None), aux
+
+
+def apply_block_decode(
+    cfg: ModelConfig, bdef: BlockDef, params, x, cache, pos, *,
+    rope_cs, long=False,
+):
+    """fori_loop (not scan) over the stacked layers: the cache is a loop
+    CARRY updated in place per layer, so the buffer aliases with the
+    donated input.  A scan would emit the updated cache as stacked
+    outputs (ys) — a full second cache allocation per decode step (+5 GiB
+    on qwen2-72b decode) and a full extra copy of HBM traffic."""
+
+    def body(i, carry):
+        x, cache = carry
+        layer_params = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            params,
+        )
+        layer_cache = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            cache,
+        )
+        new = {}
+        for li, (mixer, mlp) in enumerate(bdef.pattern):
+            x, nc = apply_layer_decode(
+                cfg, layer_params[f"l{li}"], x, layer_cache[f"l{li}"], pos,
+                mixer, mlp, rope_cs=rope_cs, long=long,
+            )
+            new[f"l{li}"] = nc
+        cache = jax.tree.map(
+            lambda c, n_: jax.lax.dynamic_update_index_in_dim(
+                c, n_.astype(c.dtype), i, 0
+            ),
+            cache, new,
+        )
+        return x, cache
+
+    x, new_cache = jax.lax.fori_loop(0, bdef.repeat, body, (x, cache))
+    return x, new_cache

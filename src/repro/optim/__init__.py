@@ -1,0 +1,24 @@
+"""Optimizers: sharded AdamW (+int8 moments), Adafactor, schedules."""
+from repro.optim.adamw import Optimizer, make_adamw
+from repro.optim.adafactor import make_adafactor
+from repro.optim.schedule import constant, warmup_cosine
+
+
+def make_optimizer(name: str, lr_fn=None) -> Optimizer:
+    if name == "adamw":
+        return make_adamw(lr_fn=lr_fn)
+    if name == "adamw8bit":
+        return make_adamw(lr_fn=lr_fn, int8=True)
+    if name == "adafactor":
+        return make_adafactor(lr_fn=lr_fn)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+__all__ = [
+    "Optimizer",
+    "constant",
+    "make_adafactor",
+    "make_adamw",
+    "make_optimizer",
+    "warmup_cosine",
+]

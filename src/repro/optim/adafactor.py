@@ -1,0 +1,132 @@
+"""Adafactor (factored second moments, momentum-free) — for the ≥200B MoE
+archs whose AdamW state would not fit pod HBM (DESIGN.md §6).
+
+Follows Shazeer & Stern 2018 / the t5x implementation: rank-1 factored
+second-moment statistics for >=2D params, decay 1 - t^-0.8, RMS-scaled
+update clipping, relative step sizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+def make_adafactor(
+    *,
+    lr_fn=None,
+    eps1: float = 1e-30,
+    eps2: float = 1e-3,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr_fn or (lambda step: 1e-4)
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "stats": jax.tree.map(st, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    # leaves larger than this get their update lax.map'ed over the
+    # stacked-layers dim: the fp32 staging copies of a multi-GB bf16
+    # leaf otherwise dominate peak memory (EXPERIMENTS.md §Perf,
+    # dsv3 train cell: ~50 GB of optimizer temporaries)
+    CHUNK_BYTES = 1 << 28
+
+    def update(grads, state, params, step):
+        count = state["count"] + 1
+        t = count.astype(jnp.float32)
+        beta2 = 1.0 - t ** -0.8
+        lr = lr_fn(step)
+        is_stat = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+
+        p_leaves, p_def = jax.tree.flatten(params)
+        g_leaves = jax.tree.leaves(grads)
+        s_leaves, s_def = jax.tree.flatten(state["stats"], is_leaf=is_stat)
+
+        def upd_factored(p, g, vr_old, vc_old):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps1
+            vr = beta2 * vr_old + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc_old + (1 - beta2) * jnp.mean(g2, axis=-2)
+            rfac = jax.lax.rsqrt(
+                vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps1)
+            )[..., None]
+            u = g * rfac * jax.lax.rsqrt(vc)[..., None, :]
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps1)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            base = p.astype(jnp.float32)
+            scale = jnp.maximum(jnp.sqrt(jnp.mean(jnp.square(base))), eps2)
+            newp = base - lr * scale * u - lr * weight_decay * base
+            return newp.astype(p.dtype), vr, vc
+
+        new_p, new_s = [], []
+        for p, g, st in zip(p_leaves, g_leaves, s_leaves):
+            if "vr" in st:
+                if (p.ndim >= 3 and p.shape[0] > 1
+                        and p.size * 4 > CHUNK_BYTES):
+                    # stacked-layer leaf: update one layer slice at a
+                    # time (fp32 temporaries shrink by the stack depth;
+                    # RMS clip becomes per-layer, which is if anything
+                    # better-behaved)
+                    newp, vr, vc = jax.lax.map(
+                        lambda args: upd_factored(*args),
+                        (p, g, st["vr"], st["vc"]),
+                    )
+                else:
+                    newp, vr, vc = upd_factored(p, g, st["vr"], st["vc"])
+                new_s.append({"vr": vr, "vc": vc})
+                new_p.append(newp)
+                continue
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps1
+            v = beta2 * st["v"] + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(v)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps1)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            base = p.astype(jnp.float32)
+            scale = jnp.maximum(jnp.sqrt(jnp.mean(jnp.square(base))), eps2)
+            newp = base - lr * scale * u - lr * weight_decay * base
+            new_s.append({"v": v})
+            new_p.append(newp.astype(p.dtype))
+
+        return (
+            jax.tree.unflatten(p_def, new_p),
+            {"stats": jax.tree.unflatten(s_def, new_s), "count": count},
+        )
+
+    def state_schema(param_schema):
+        from repro.sharding.rules import ParamSpec, is_spec
+
+        def st(ps: ParamSpec):
+            zero = lambda k, s, d: jnp.zeros(s, d)
+            if _factored(ps.shape):
+                return {
+                    "vr": ParamSpec(ps.shape[:-1], ps.axes[:-1], jnp.float32,
+                                    zero),
+                    "vc": ParamSpec(ps.shape[:-2] + ps.shape[-1:],
+                                    ps.axes[:-2] + ps.axes[-1:], jnp.float32,
+                                    zero),
+                }
+            return {"v": ParamSpec(ps.shape, ps.axes, jnp.float32, zero)}
+
+        return {
+            "stats": jax.tree.map(st, param_schema, is_leaf=is_spec),
+            "count": ParamSpec((), (), jnp.int32,
+                               lambda k, s, d: jnp.zeros(s, d)),
+        }
+
+    return Optimizer(init=init, update=update, state_schema=state_schema)

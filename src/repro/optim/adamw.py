@@ -1,0 +1,219 @@
+"""Sharded AdamW with optional int8-quantized moments ("8-bit Adam").
+
+Optimizer state is ZeRO-1 sharded: each moment tensor inherits its param's
+sharding plus an extra "data"-axis split on the largest still-unsharded
+divisible dim (sharding/rules.zero1 rule), so 100B+ states spread over the
+full pod instead of the model-parallel group only.
+
+int8 moments use blockwise (last-dim blocks of 128) absmax quantization —
+state bytes drop 4x vs fp32, the dequant/requant is elementwise and fuses
+into the update.  bf16 params keep an fp32 master copy unless the config
+opts out (DeepSeek-V3 uses Adafactor instead; see optim/adafactor.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    state_schema: Callable[[Any], Any]   # ParamSpec pytree for dry-run/ckpt
+
+
+def _quantizable(x_shape, x_size) -> bool:
+    return len(x_shape) > 0 and x_size >= QBLOCK and x_shape[-1] % QBLOCK == 0
+
+
+def _q8(x: jax.Array):
+    """Blockwise signed linear int8 quantization (for the 1st moment).
+
+    q keeps the ORIGINAL param shape (so it inherits the param's
+    sharding); only the scale carries the block structure.
+    """
+    if not _quantizable(x.shape, x.size):
+        return x.astype(jnp.float32), None
+    shp = x.shape[:-1] + (x.shape[-1] // QBLOCK, QBLOCK)
+    xb = x.reshape(shp)
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(xb / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return q.reshape(x.shape), scale.astype(jnp.float32)
+
+
+def _dq8(q, scale, shape):
+    if scale is None:
+        return q
+    shp = shape[:-1] + (shape[-1] // QBLOCK, QBLOCK)
+    return (q.reshape(shp).astype(jnp.float32) * scale).reshape(shape)
+
+
+_VLOG_FLOOR = 1e-24
+
+
+def _q8log(x: jax.Array):
+    """Blockwise log-space uint8 quantization (for the 2nd moment).
+
+    v spans many orders of magnitude within a block; linear absmax
+    underflows small entries to 0 and the update m/(sqrt(v)+eps) blows up.
+    Affine quantization of log(v) keeps ~0.4%-of-log-range relative
+    precision across the whole block (the same reason bitsandbytes uses
+    dynamic-exponent codes).
+    """
+    if not _quantizable(x.shape, x.size):
+        return x.astype(jnp.float32), None, None
+    shp = x.shape[:-1] + (x.shape[-1] // QBLOCK, QBLOCK)
+    xl = jnp.log(x.reshape(shp) + _VLOG_FLOOR)
+    lo = jnp.min(xl, axis=-1, keepdims=True)
+    hi = jnp.max(xl, axis=-1, keepdims=True)
+    span = jnp.maximum(hi - lo, 1e-6)
+    q = jnp.round((xl - lo) / span * 255.0 - 128.0).astype(jnp.int8)
+    return q.reshape(x.shape), lo.astype(jnp.float32), span.astype(jnp.float32)
+
+
+def _dq8log(q, lo, span, shape):
+    if lo is None:
+        return q
+    shp = shape[:-1] + (shape[-1] // QBLOCK, QBLOCK)
+    xl = (q.reshape(shp).astype(jnp.float32) + 128.0) / 255.0 * span + lo
+    return (jnp.exp(xl) - _VLOG_FLOOR).reshape(shape)
+
+
+def make_adamw(
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    lr_fn: Callable[[jax.Array], jax.Array] | None = None,
+    int8: bool = False,
+    master_fp32: bool = True,
+) -> Optimizer:
+    lr_fn = lr_fn or (lambda step: 1e-4)
+
+    def moment_init(p, log: bool = False):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if int8:
+            if log:
+                q, lo, span = _q8log(z)
+                if lo is not None:
+                    return {"q": q, "lo": lo, "span": span}
+                return {"q": q}
+            q, s = _q8(z)
+            return {"q": q, "scale": s} if s is not None else {"q": q}
+        return z
+
+    def init(params):
+        state = {
+            "m": jax.tree.map(moment_init, params),
+            "v": jax.tree.map(lambda p: moment_init(p, log=True), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if master_fp32 and any(
+            l.dtype == jnp.bfloat16 for l in jax.tree.leaves(params)
+        ):
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params
+            )
+        return state
+
+    def _get_moment(st, shape):
+        if isinstance(st, dict):
+            if "lo" in st:
+                return _dq8log(st["q"], st["lo"], st["span"], shape)
+            return _dq8(st["q"], st.get("scale"), shape)
+        return st
+
+    def _set_moment(old, val):
+        if isinstance(old, dict):
+            if "lo" in old:
+                q, lo, span = _q8log(val)
+                return {"q": q, "lo": lo, "span": span}
+            q, s = _q8(val)
+            return {"q": q, "scale": s} if s is not None else {"q": q}
+        return val
+
+    def update(grads, state, params, step):
+        count = state["count"] + 1
+        lr = lr_fn(step)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        masters = state.get("master", params)
+
+        is_moment = lambda x: isinstance(x, dict) and "q" in x
+        p_leaves, p_def = jax.tree.flatten(params)
+        g_leaves = jax.tree.leaves(grads)
+        m_leaves, m_def = jax.tree.flatten(state["m"], is_leaf=is_moment)
+        v_leaves, _ = jax.tree.flatten(state["v"], is_leaf=is_moment)
+        ma_leaves = jax.tree.leaves(masters)
+
+        new_m, new_v, new_master = [], [], []
+        for g, m_st, v_st, master in zip(
+            g_leaves, m_leaves, v_leaves, ma_leaves
+        ):
+            g = g.astype(jnp.float32)
+            m = b1 * _get_moment(m_st, g.shape) + (1 - b1) * g
+            v = b2 * _get_moment(v_st, g.shape) + (1 - b2) * jnp.square(g)
+            mh, vh = m / c1, v / c2
+            base = master.astype(jnp.float32)
+            new = base - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * base)
+            new_m.append(_set_moment(m_st, m))
+            new_v.append(_set_moment(v_st, v))
+            new_master.append(new)
+
+        new_params = [
+            nm.astype(p.dtype) for nm, p in zip(new_master, p_leaves)
+        ]
+        new_state = {
+            "m": jax.tree.unflatten(m_def, new_m),
+            "v": jax.tree.unflatten(m_def, new_v),
+            "count": count,
+        }
+        if "master" in state:
+            new_state["master"] = jax.tree.unflatten(p_def, new_master)
+        return jax.tree.unflatten(p_def, new_params), new_state
+
+    def state_schema(param_schema):
+        import numpy as np
+
+        from repro.sharding.rules import ParamSpec, is_spec
+
+        def moment_spec(ps: ParamSpec, log: bool = False):
+            zero = lambda k, s, d: jnp.zeros(s, d)
+            size = int(np.prod(ps.shape)) if ps.shape else 1
+            if int8 and _quantizable(ps.shape, size):
+                sshape = ps.shape[:-1] + (ps.shape[-1] // QBLOCK, 1)
+                saxes = ps.axes[:-1] + (None, None)
+                out = {"q": ParamSpec(ps.shape, ps.axes, jnp.int8, zero)}
+                if log:
+                    out["lo"] = ParamSpec(sshape, saxes, jnp.float32, zero)
+                    out["span"] = ParamSpec(sshape, saxes, jnp.float32, zero)
+                else:
+                    out["scale"] = ParamSpec(sshape, saxes, jnp.float32, zero)
+                return out
+            return ParamSpec(ps.shape, ps.axes, jnp.float32, zero)
+
+        sch = {
+            "m": jax.tree.map(moment_spec, param_schema, is_leaf=is_spec),
+            "v": jax.tree.map(lambda ps: moment_spec(ps, log=True),
+                              param_schema, is_leaf=is_spec),
+            "count": ParamSpec((), (), jnp.int32,
+                               lambda k, s, d: jnp.zeros(s, d)),
+        }
+        if master_fp32 and any(
+            s.dtype == jnp.bfloat16 for s in jax.tree.leaves(
+                param_schema, is_leaf=is_spec)
+        ):
+            sch["master"] = jax.tree.map(
+                lambda ps: ParamSpec(ps.shape, ps.axes, jnp.float32, ps.init),
+                param_schema, is_leaf=is_spec,
+            )
+        return sch
+
+    return Optimizer(init=init, update=update, state_schema=state_schema)

@@ -1,0 +1,45 @@
+"""Serving step builders: prefill + decode with sharded KV caches."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.sharding.rules import AxisRules, axis_rules, param_shardings
+
+
+def build_prefill(cfg: ModelConfig, rules: AxisRules | None = None,
+                  max_seq: int | None = None):
+    def fn(params, inputs):
+        with axis_rules(rules):
+            return M.prefill(cfg, params, inputs, max_seq=max_seq)
+
+    return fn
+
+
+def build_decode(cfg: ModelConfig, rules: AxisRules | None = None):
+    def fn(params, cache, inputs):
+        with axis_rules(rules):
+            return M.decode_step(cfg, params, cache, inputs)
+
+    return fn
+
+
+def cache_shardings(cfg: ModelConfig, batch: int, max_seq: int,
+                    rules: AxisRules):
+    sch = M.cache_schema(cfg, batch, max_seq)
+    return param_shardings(sch, rules)
+
+
+def serve_input_shardings(specs: dict, rules: AxisRules):
+    out = {}
+    for k, v in specs.items():
+        if v.shape == ():
+            out[k] = NamedSharding(rules.mesh, P())
+        else:
+            out[k] = NamedSharding(
+                rules.mesh,
+                rules.spec(("batch",) + (None,) * (len(v.shape) - 1), v.shape),
+            )
+    return out

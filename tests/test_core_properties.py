@@ -1,0 +1,246 @@
+"""Property-based tests (hypothesis) on the auto-scaler's invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    GammaModel,
+    LogCapacityModel,
+    burst_cores,
+    conservation_ok,
+    correction_factor,
+    heterogeneous_split,
+    round_to_legal_slice,
+)
+from repro.core.monitor import StepTimeMonitor
+
+# ------------------------------------------------------- capacity models
+
+
+@given(
+    A=st.floats(0.1, 1.0),
+    B=st.floats(-2.0, 4.0),
+    cores=st.lists(
+        st.integers(2, 4096), min_size=3, max_size=10, unique=True
+    ),
+)
+def test_capacity_fit_recovers_exact_model(A, B, cores):
+    m_true = LogCapacityModel(A=A, B=B)
+    times = [m_true.predict_time(c) for c in cores]
+    m_fit = LogCapacityModel.fit(cores, times)
+    assert abs(m_fit.A - A) < 1e-6
+    assert abs(m_fit.B - B) < 1e-6
+    assert m_fit.r2(cores, times) > 1 - 1e-9
+
+
+@given(
+    A=st.floats(0.2, 1.0), B=st.floats(-1.0, 3.0),
+    c=st.floats(1.0, 1e5),
+)
+def test_capacity_inverse_property(A, B, c):
+    """cores_for(predict_time(c)) == c (model inversion is exact)."""
+    m = LogCapacityModel(A=A, B=B)
+    c_back = m.cores_for(m.predict_time(c))
+    assert abs(c_back - c) / c < 1e-6
+
+
+@given(A=st.floats(0.2, 1.0), B=st.floats(-1.0, 3.0))
+def test_capacity_monotone_in_cores(A, B):
+    m = LogCapacityModel(A=A, B=B)
+    times = [m.predict_time(c) for c in [1, 2, 8, 64, 512]]
+    assert all(t1 > t2 for t1, t2 in zip(times, times[1:]))
+
+
+@given(
+    need=st.floats(0, 2048), have=st.integers(1, 1024),
+    K=st.floats(0.25, 4.0),
+)
+def test_burst_cores_nonnegative_and_scaled(need, have, K):
+    c_n = burst_cores(need, have, K)
+    assert c_n >= 0
+    if need > have:
+        assert abs(c_n - (need - have) * K) < 1e-9
+
+
+@given(c_n=st.floats(0, 600))
+def test_round_to_legal_always_covers(c_n):
+    legal = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512]
+    s = round_to_legal_slice(c_n, legal)
+    if c_n <= 0:
+        assert s == 0
+    elif c_n <= max(legal):
+        assert s >= c_n and s in legal
+    else:
+        assert s == max(legal)
+
+
+def test_correction_factor_matches_paper_form():
+    """mode='paper': K = (-A ln c + B)/(-D ln c + E), the paper's literal
+    ratio; mode='time' is the stable throughput ratio (see capacity.py)."""
+    cloud = LogCapacityModel(A=0.77, B=7.1)      # paper eq. 6
+    cluster = LogCapacityModel(A=0.65, B=6.5)    # paper eq. 7
+    for c in [10, 20, 40]:
+        K = correction_factor(cloud, cluster, c, mode="paper")
+        expected = (-0.77 * math.log(c) + 7.1) / (-0.65 * math.log(c) + 6.5)
+        assert abs(K - expected) < 1e-9
+        K_time = correction_factor(cloud, cluster, c, mode="time")
+        assert K_time == pytest.approx(
+            cloud.predict_time(c) / cluster.predict_time(c)
+        )
+
+
+def test_correction_factor_stable_near_one_second():
+    """The paper's L-ratio diverges when log10(t) ≈ 0; the time-ratio K
+    must stay finite and sensible there (the LM-step regime)."""
+    cluster = LogCapacityModel.fit([2, 4, 8], [2.0, 1.0, 0.5])  # t(4)=1s
+    cloud = LogCapacityModel.fit([2, 4, 8], [2.5, 1.25, 0.625])
+    K = correction_factor(cloud, cluster, 4.0)
+    assert 1.2 < K < 1.3
+
+
+# ------------------------------------------------------------ gamma model
+
+
+@given(
+    a=st.floats(1e-4, 10.0), b=st.floats(-5.0, 5.0),
+    gamma=st.integers(1, 10_000),
+)
+def test_gamma_inverse_property(a, b, gamma):
+    m = GammaModel(a=a, b=b)
+    g = m.gamma_for(m.time_for(gamma))
+    assert abs(g - gamma) <= 1  # integer ceil rounding
+
+
+@given(
+    a=st.floats(0.001, 5.0), b=st.floats(0.0, 5.0),
+    gammas=st.lists(st.integers(1, 5000), min_size=3, max_size=8,
+                    unique=True),
+)
+def test_gamma_fit_recovers_exact_model(a, b, gammas):
+    m_true = GammaModel(a=a, b=b)
+    times = [m_true.time_for(g) for g in gammas]
+    m = GammaModel.fit(gammas, times)
+    assert abs(m.a - a) / a < 1e-6
+    assert m.r2(gammas, times) > 1 - 1e-9
+
+
+# -------------------------------------------------------------- allocator
+
+
+@given(
+    n_mb=st.integers(1, 64),
+    mb=st.sampled_from([1, 2, 4, 8]),
+    seq=st.sampled_from([16, 64]),
+    tps=st.lists(st.floats(0.1, 10.0), min_size=1, max_size=4),
+)
+def test_allocator_conserves_work(n_mb, mb, seq, tps):
+    gb = n_mb * mb
+    plan = heterogeneous_split(
+        global_batch=gb, microbatch=mb, seq_len=seq, throughputs=tps
+    )
+    assert conservation_ok(plan, gb)
+    assert plan.total_tokens == gb * seq
+    padded = {s.padded_microbatches for s in plan.shares}
+    assert len(padded) == 1  # uniform padded count (SPMD requirement)
+    for s in plan.shares:
+        m = plan.mask_for(s.pod)
+        assert m.sum() == s.microbatches
+        assert len(m) == s.padded_microbatches
+
+
+@given(tp2=st.floats(0.1, 10.0))
+def test_allocator_share_monotone_in_throughput(tp2):
+    plan = heterogeneous_split(
+        global_batch=64, microbatch=1, seq_len=8, throughputs=[1.0, tp2]
+    )
+    a, b = plan.shares[0].microbatches, plan.shares[1].microbatches
+    if tp2 > 1.5:
+        assert b >= a
+    if tp2 < 0.67:
+        assert a >= b
+
+
+# ---------------------------------------------------------------- monitor
+
+
+def test_monitor_predictable_on_constant_series():
+    m = StepTimeMonitor(window=16)
+    for _ in range(10):
+        m.observe(1.0)
+    assert m.predictable()
+    assert abs(m.step_time() - 1.0) < 1e-6
+
+
+def test_monitor_detects_regime_change():
+    m = StepTimeMonitor(window=16)
+    for _ in range(16):
+        m.observe(1.0)
+    for _ in range(8):
+        m.observe(2.2)
+    assert m.regime_changes, "sustained slowdown must flush the window"
+    assert m.step_time() > 1.8
+
+
+def test_monitor_isolated_straggler_filtered():
+    m = StepTimeMonitor(window=16)
+    for _ in range(12):
+        m.observe(1.0)
+    m.observe(8.0)  # single straggler
+    for _ in range(3):
+        m.observe(1.0)
+    assert abs(m.step_time() - 1.0) < 0.1
+    assert len(m.stragglers) == 1
+
+
+# ------------------------------------------------------ int8 quantization
+
+
+@given(
+    data=st.lists(
+        st.floats(-1e3, 1e3, allow_nan=False), min_size=128, max_size=256
+    )
+)
+@settings(max_examples=30, deadline=None)
+def test_q8_roundtrip_error_bound(data):
+    import jax.numpy as jnp
+
+    from repro.optim.adamw import QBLOCK, _dq8, _q8
+
+    n = (len(data) // QBLOCK) * QBLOCK
+    if n == 0:
+        return
+    x = jnp.asarray(np.asarray(data[:n], np.float32))
+    q, scale = _q8(x)
+    back = _dq8(q, scale, x.shape)
+    blocks = np.asarray(x).reshape(-1, QBLOCK)
+    # half-step rounding bound with slack for f32 arithmetic at exact
+    # .5-ulp boundaries (e.g. 250 with absmax 500 -> error == bound)
+    bound = np.abs(blocks).max(axis=1) / 127.0 * 0.5 * (1 + 1e-4) + 1e-6
+    err = np.abs(np.asarray(back) - np.asarray(x)).reshape(-1, QBLOCK)
+    assert (err.max(axis=1) <= bound).all()
+
+
+@given(
+    scale=st.floats(1e-12, 1e3),
+    ratio=st.floats(1.0, 1e6),
+)
+@settings(max_examples=30, deadline=None)
+def test_q8log_relative_error_small_across_magnitudes(scale, ratio):
+    """Log-space quantization keeps relative error bounded even when a
+    block spans many orders of magnitude (the linear-quant failure)."""
+    import jax.numpy as jnp
+
+    from repro.optim.adamw import QBLOCK, _dq8log, _q8log
+
+    rng = np.random.default_rng(0)
+    x = np.exp(
+        rng.uniform(np.log(scale), np.log(scale * ratio), QBLOCK)
+    ).astype(np.float32)
+    xj = jnp.asarray(x)
+    q, lo, span = _q8log(xj)
+    back = np.asarray(_dq8log(q, lo, span, xj.shape))
+    rel = np.abs(back - x) / np.maximum(x, 1e-20)
+    assert rel.max() < 0.05

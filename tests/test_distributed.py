@@ -1,0 +1,280 @@
+"""Distributed-path tests that need >1 device — run in subprocesses with
+forced host device counts (the dry-run trick, scoped to the child)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(script: str, timeout=600) -> str:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", script, SRC],
+        capture_output=True, text=True, env=env, timeout=timeout,
+    )
+    assert out.returncode == 0, (out.stdout[-1000:], out.stderr[-3000:])
+    return out.stdout
+
+
+_RESHARD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import jax, jax.numpy as jnp, numpy as np, tempfile
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import RunConfig, get_config, smoke_config
+from repro.configs.shapes import ShapeConfig
+from repro.data.pipeline import SyntheticLMPipeline
+from repro.optim import constant, make_optimizer
+from repro.runtime.train_step import (
+    batch_shardings, build_train_step, state_schema, state_shardings,
+)
+from repro.sharding.rules import abstract_params, init_params, make_rules
+
+cfg = smoke_config(get_config("granite-8b"))
+run = RunConfig(loss_chunk=32)
+shape = ShapeConfig("t", "train", 32, 8)
+opt = make_optimizer("adamw", constant(1e-3))
+sch = state_schema(cfg, run, opt)
+pipe = SyntheticLMPipeline(cfg, shape)
+
+def session(mesh_shape, axes):
+    mesh = jax.make_mesh(mesh_shape, axes,
+                         devices=jax.devices()[: int(np.prod(mesh_shape))])
+    rules = make_rules(mesh, "train")
+    sh = state_shardings(sch, rules, run)
+    fn = jax.jit(build_train_step(cfg, run, opt, rules))
+    return mesh, rules, sh, fn
+
+# --- phase 1: "cluster" = 4 chips (2 data x 2 model) ---
+mesh1, rules1, sh1, step1 = session((2, 2), ("data", "model"))
+params = jax.device_put(init_params(sch["params"], jax.random.key(0)),
+                        sh1["params"])
+state = {"params": params, "opt": opt.init(params),
+         "step": jnp.zeros((), jnp.int32)}
+for i in range(4):
+    state, m = step1(state, pipe.batch_at(i))
+loss_before = float(m["loss"])
+
+with tempfile.TemporaryDirectory() as d:
+    mgr = CheckpointManager(d, async_save=False)
+    mgr.save(4, state, extra={"data_step": 4})
+
+    # --- burst: re-mesh to 8 chips (2 pod x 2 data x 2 model) ---
+    mesh2, rules2, sh2, step2 = session((2, 2, 2), ("pod", "data", "model"))
+    restored, extra = mgr.restore(abstract_params(sch), shardings=sh2)
+    assert int(extra["data_step"]) == 4
+    for i in range(4, 8):
+        restored, m2 = step2(restored, pipe.batch_at(i))
+    loss_after = float(m2["loss"])
+
+    # --- reference: same 8 steps without the re-mesh ---
+    params_r = jax.device_put(init_params(sch["params"], jax.random.key(0)),
+                              sh1["params"])
+    ref = {"params": params_r, "opt": opt.init(params_r),
+           "step": jnp.zeros((), jnp.int32)}
+    for i in range(8):
+        ref, mr = step1(ref, pipe.batch_at(i))
+
+for a, b in zip(jax.tree.leaves(restored["params"]),
+                jax.tree.leaves(ref["params"])):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=2e-5)
+print("RESHARD_OK", loss_before, loss_after)
+"""
+
+
+def test_checkpoint_reshard_across_meshes():
+    """The burst mechanism: train on a (2,2) mesh, checkpoint, restore
+    onto a (2,2,2) pod mesh, continue — matches the un-burst run."""
+    out = _run(_RESHARD)
+    assert "RESHARD_OK" in out
+
+
+_COMPRESSED = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs import RunConfig, get_config, smoke_config
+from repro.configs.shapes import ShapeConfig
+from repro.data.pipeline import SyntheticLMPipeline
+from repro.optim.compression import cross_pod_reduce
+from repro.runtime.train_step import batch_shardings, compute_grads
+from repro.sharding.rules import axis_rules, init_params, make_rules
+
+cfg = smoke_config(get_config("yi-6b"))
+run = RunConfig(loss_chunk=32)
+shape = ShapeConfig("t", "train", 32, 8)
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+rules = make_rules(mesh, "train")
+inner_rules = dataclasses.replace(
+    rules, rules={**rules.rules, "batch": (("data",),)})
+pipe = SyntheticLMPipeline(cfg, shape)
+from repro.models import model as M
+params = init_params(M.schema(cfg), jax.random.key(0))
+batch = pipe.batch_at(0)
+
+# 1) pure SPMD gradients (XLA reduces over pod+data)
+def g_spmd(p, b):
+    with axis_rules(rules):
+        g, _ = compute_grads(cfg, run, p, b)
+    return g
+grads_spmd = jax.jit(g_spmd)(params, batch)
+
+# 2) manual-pod shard_map with exact psum / int8 exchange
+# (token-weighted cross-pod mean: each pod normalizes by its own count)
+def make_manual(method):
+    def inner(p, b):
+        with axis_rules(inner_rules):
+            g, m = compute_grads(cfg, run, p, b)
+        cnt = m["token_count"].astype(jnp.float32)
+        g = jax.tree.map(lambda x: x * cnt, g)
+        g = cross_pod_reduce(g, "pod", method=method)
+        cnt_total = jax.lax.psum(cnt, "pod")
+        return jax.tree.map(lambda x: x / cnt_total, g)
+    def f(p, b):
+        pspec = jax.tree.map(lambda _: P(), p)
+        bspec = jax.tree.map(lambda x: P("pod") if x.ndim else P(), b)
+        return jax.shard_map(inner, mesh=mesh, in_specs=(pspec, bspec),
+                             out_specs=pspec, axis_names={"pod"},
+                             check_vma=False)(p, b)
+    return jax.jit(f)
+
+grads_exact = make_manual("none")(params, batch)
+grads_int8 = make_manual("int8")(params, batch)
+
+for a, b_ in zip(jax.tree.leaves(grads_spmd), jax.tree.leaves(grads_exact)):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b_, np.float32), atol=2e-5)
+# int8 path: blockwise quantization error bound (scale/127 per element of
+# the exchanged pod-partial gradient)
+for a, b_ in zip(jax.tree.leaves(grads_exact), jax.tree.leaves(grads_int8)):
+    a, b_ = np.asarray(a, np.float32), np.asarray(b_, np.float32)
+    bound = max(np.abs(a).max() / 127.0, 1e-6) * 1.5 + 1e-7
+    assert np.abs(a - b_).max() <= bound, (np.abs(a - b_).max(), bound)
+print("COMPRESSED_OK")
+"""
+
+
+def test_compressed_cross_pod_gradients():
+    """Two-level reduction: shard_map-manual pod axis with int8 gradient
+    exchange ≈ the exact SPMD gradients; quantization error bounded by
+    the blockwise absmax/127 scale."""
+    out = _run(_COMPRESSED)
+    assert "COMPRESSED_OK" in out
+
+
+_SHARDED_EQUIV = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import RunConfig, get_config, smoke_config
+from repro.configs.shapes import SMOKE_SHAPES, input_specs, tokens_like
+from repro.models import model as M
+from repro.sharding.rules import init_params, make_rules, axis_rules
+from repro.launch.mesh import make_mesh
+
+# loss on 1 device == loss on a (2,2)/(2,2,2) sharded mesh.
+# deepseek-v2 runs with ep_over_dp=True: the explicit shard_map all-to-all
+# expert dispatch must agree with the single-device grouped-einsum path
+# (drop-free smoke capacity => group-invariant routing).
+for arch in ["yi-6b", "deepseek-v2-236b", "mamba2-370m", "jamba-v0.1-52b"]:
+    cfg = smoke_config(get_config(arch))
+    params = init_params(M.schema(cfg), jax.random.key(0))
+    batch = tokens_like(input_specs(cfg, SMOKE_SHAPES["train_4k"]))
+    loss0, _ = jax.jit(lambda p, b: M.loss_fn(cfg, p, b, loss_chunk=32))(
+        params, batch)
+    for shape, axes in [((2, 2), ("data", "model")),
+                        ((2, 2, 2), ("pod", "data", "model"))]:
+        mesh = make_mesh(shape, axes)
+        rules = make_rules(mesh, "train")
+        def f(p, b):
+            with axis_rules(rules):
+                return M.loss_fn(cfg, p, b, loss_chunk=32)
+        loss1, _ = jax.jit(f)(params, batch)
+        err = abs(float(loss0) - float(loss1))
+        # 5e-4 abs on a ~4.9 loss: the EP path splits the d-contraction
+        # across "model" (psum), a pure f32 reassociation
+        assert err < 5e-4, (arch, shape, err)
+print("SHARDED_EQUIV_OK")
+"""
+
+
+def test_sharded_loss_equals_single_device():
+    """SPMD partitioning must not change the math (MoE group-scan, MLA,
+    SSD and hybrid paths under real >1-device meshes)."""
+    out = _run(_SHARDED_EQUIV)
+    assert "SHARDED_EQUIV_OK" in out
+
+
+_PIPELINE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding
+from repro.configs import RunConfig, get_config, smoke_config
+from repro.configs.base import BlockDef
+from repro.configs.shapes import ShapeConfig
+from repro.data.pipeline import SyntheticLMPipeline
+from repro.optim import constant, make_optimizer
+from repro.runtime.pipeline import build_pipeline_train_step
+from repro.runtime.train_step import build_train_step, state_schema
+from repro.sharding.rules import init_params, make_rules
+
+base = smoke_config(get_config("granite-8b"))
+# 2 layers so each of the 2 stages owns one
+cfg = dataclasses.replace(
+    base, num_layers=2,
+    blocks=(BlockDef(pattern=(("attn", "dense"),), repeat=2),),
+).validate()
+run = RunConfig(loss_chunk=32, pipeline_stages=2, pp_microbatches=4)
+shape = ShapeConfig("t", "train", 32, 8)
+opt = make_optimizer("adamw", constant(1e-3))
+sch = state_schema(cfg, run, opt)
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+rules = make_rules(mesh, "train")
+pipe = SyntheticLMPipeline(cfg, shape)
+
+def init():
+    p = init_params(sch["params"], jax.random.key(0))
+    return {"params": p, "opt": opt.init(p),
+            "step": jnp.zeros((), jnp.int32)}
+
+pp_step, pp_specs = build_pipeline_train_step(cfg, run, opt, rules)
+pp_step = jax.jit(pp_step)
+dp_step = jax.jit(build_train_step(cfg, run, opt, rules))
+
+s_pp, s_dp = init(), init()
+for i in range(3):
+    b = pipe.batch_at(i)
+    s_pp, m_pp = pp_step(s_pp, b)
+    s_dp, m_dp = dp_step(s_dp, b)
+    dl = abs(float(m_pp["loss"]) - float(m_dp["loss"]))
+    assert dl < 5e-4, (i, float(m_pp["loss"]), float(m_dp["loss"]))
+for a, b_ in zip(jax.tree.leaves(s_pp["params"]),
+                 jax.tree.leaves(s_dp["params"])):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b_, np.float32), atol=3e-3)
+print("PIPELINE_OK", float(m_pp["loss"]))
+"""
+
+
+def test_pipeline_parallel_matches_data_parallel():
+    """2-stage GPipe over the pod axis trains identically (modulo fp
+    reordering across µbatches) to the plain SPMD step."""
+    out = _run(_PIPELINE)
+    assert "PIPELINE_OK" in out

@@ -1,0 +1,167 @@
+"""End-to-end behaviour tests for the paper's system: the self-adaptive
+burst meets a deadline a static allocation would miss; failures recover
+from checkpoints; the FWI application adapts on the real solver."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BurstPlanner,
+    DeadlinePredictor,
+    ElasticOrchestrator,
+    LogCapacityModel,
+    OverheadModel,
+    PodSpec,
+    Resources,
+)
+from repro.core.events import SlowdownWindow
+from repro.core.sim_session import SimWorkload, sim_session_factory
+
+WORK = 2000.0  # chip-seconds per step
+CHIPS = [16, 32, 64, 128, 256]
+
+
+def _models(cloud_slowdown=1.4):
+    cluster = LogCapacityModel.fit(CHIPS, [WORK / c for c in CHIPS])
+    cloud = LogCapacityModel.fit(
+        CHIPS, [cloud_slowdown * WORK / c for c in CHIPS]
+    )
+    return cluster, cloud
+
+
+def _planner(max_burst=256, **kw):
+    cluster, cloud = _models()
+    return BurstPlanner(
+        cluster_model=cluster, cloud_model=cloud, chips_cluster=256,
+        legal_slices=[16, 32, 64, 128, 256],
+        overheads=OverheadModel(ckpt_s=5, provision_s=60, restart_s=20),
+        max_burst_chips=max_burst, **kw,
+    )
+
+
+def _run(planner, deadline, windows=None, failures=None, steps=300, seed=0):
+    orch = ElasticOrchestrator(
+        planner=planner, predictor=DeadlinePredictor(deadline),
+        check_every=8, ckpt_every=25,
+    )
+    factory = sim_session_factory(
+        SimWorkload(WORK, jitter=0.01), rng=np.random.default_rng(seed),
+        windows=windows, failures=failures, sync_overhead_s=0.05,
+    )
+    return orch.run(
+        session_factory=factory,
+        initial=Resources(pods=[PodSpec(chips=256, name="cluster")],
+                          shares=[1.0]),
+        steps_total=steps,
+    )
+
+
+CONGESTION = {0: [SlowdownWindow(40, 10 ** 9, 2.2)]}
+
+
+def test_burst_meets_deadline_where_static_misses():
+    """The paper's core claim (its §3.3 / conclusion)."""
+    deadline = 3000.0
+    rec_static = _run(_planner(max_burst=0), deadline, windows=CONGESTION)
+    rec_adapt = _run(_planner(), deadline, windows=CONGESTION)
+    assert not rec_static.met_deadline
+    assert rec_adapt.met_deadline
+    bursts = [e for e in rec_adapt.events if e.kind == "burst"]
+    assert bursts, "must actually burst"
+    assert rec_adapt.elapsed_s < rec_static.elapsed_s
+
+
+def test_no_burst_when_deadline_safe():
+    rec = _run(_planner(), deadline=10_000.0, windows=None)
+    assert rec.met_deadline
+    assert not [e for e in rec.events if e.kind == "burst"]
+
+
+def test_burst_declined_when_overhead_dominates():
+    """Near-infeasible overheads: the planner must decline (beyond-paper
+    overhead accounting, its §3.3 future work)."""
+    cluster, cloud = _models()
+    planner = BurstPlanner(
+        cluster_model=cluster, cloud_model=cloud, chips_cluster=256,
+        legal_slices=[256],
+        overheads=OverheadModel(ckpt_s=500, provision_s=5000,
+                                restart_s=500),
+    )
+    rec = _run(planner, deadline=2400.0, windows=CONGESTION)
+    assert not [e for e in rec.events if e.kind == "burst"]
+
+
+def test_failure_recovers_from_checkpoint():
+    rec = _run(_planner(), deadline=10_000.0, failures={100: 0},
+               steps=150)
+    fails = [e for e in rec.events if e.kind == "failure"]
+    assert len(fails) == 1
+    assert rec.completed and rec.steps == 150
+
+
+def test_dynamic_deadline_change_triggers_burst():
+    """Paper §2: the deadline itself may change at runtime."""
+    orch = ElasticOrchestrator(
+        planner=_planner(), predictor=DeadlinePredictor(10_000.0),
+        check_every=8,
+    )
+    factory = sim_session_factory(
+        SimWorkload(WORK, jitter=0.01), rng=np.random.default_rng(1),
+    )
+
+    class TighteningSession:
+        def __init__(self, inner):
+            self.inner = inner
+
+        def run_step(self, step):
+            if step == 60:
+                orch.predictor.set_deadline(1800.0)  # tightened mid-run
+            return self.inner.run_step(step)
+
+        def checkpoint(self, step):
+            return self.inner.checkpoint(step)
+
+    def wrapped_factory(res, start, restored):
+        return TighteningSession(factory(res, start, restored))
+
+    rec = orch.run(
+        session_factory=wrapped_factory,
+        initial=Resources(pods=[PodSpec(chips=256)], shares=[1.0]),
+        steps_total=300,
+    )
+    assert [e for e in rec.events if e.kind == "burst"]
+
+
+def test_fwi_adaptive_on_real_solver():
+    from repro.fwi.calibrate import fit_capacity_models
+    from repro.fwi.driver import TimeModel, fwi_session_factory
+    from repro.fwi.solver import FWIConfig
+
+    cfg = FWIConfig(nz=64, nx=128, timesteps=120, n_shots=1,
+                    sponge_width=8)
+    cluster, cloud, samples = fit_capacity_models(
+        cfg, cloud_slowdown=1.4, chip_counts=(8, 16, 32, 64, 128),
+    )
+    assert cluster.r2(samples["chips"], samples["t_cluster"]) > 0.99
+    work = samples["t1_measured"]
+    tm = TimeModel(chip_seconds_per_step=work, congestion_from=30,
+                   congestion_factor=2.0, jitter=0.01)
+    deadline = work / 64 * 120 * 1.35
+    planner = BurstPlanner(
+        cluster_model=cluster, cloud_model=cloud, chips_cluster=64,
+        legal_slices=[8, 16, 32, 64, 128],
+        overheads=OverheadModel(ckpt_s=work / 64 * 2,
+                                provision_s=work / 64 * 6,
+                                restart_s=work / 64 * 2),
+    )
+    orch = ElasticOrchestrator(
+        planner=planner, predictor=DeadlinePredictor(deadline),
+        check_every=6, ckpt_every=40,
+    )
+    rec = orch.run(
+        session_factory=fwi_session_factory(cfg, tm),
+        initial=Resources(pods=[PodSpec(chips=64, name="cluster")],
+                          shares=[1.0]),
+        steps_total=120,
+    )
+    assert rec.met_deadline
+    assert [e for e in rec.events if e.kind == "burst"]
