@@ -1,0 +1,129 @@
+"""Scan-fused propagation engine vs the seed per-step loop, and
+temporally-blocked vs exchange-every-step halo communication.
+
+Two claims, measured on the paper's 600×600 / 4-shot geometry:
+
+* steps/sec: the seed engine dispatched ONE jitted step per timestep
+  from Python with the roll-based laplacian and stacked traces on the
+  host — reproduced here verbatim as the baseline.  The fused engine is
+  a single ``lax.scan`` dispatch (unrolled body, pad-slice laplacian,
+  traces collected inside the scan).  Target: ≥ 3×.
+* ppermute count: the temporally-blocked sharded runner exchanges one
+  packed k·HALO halo per k timesteps — same 2 collective-permutes per
+  block as k=1, i.e. k× fewer per timestep (latency, not bandwidth, is
+  what the slow cluster↔cloud seam charges — paper §3.3).
+
+CPU wall numbers (interpret-free jnp paths); relative ratios are the
+deliverable, absolute times are not TPU projections.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.fwi.domain import (
+    halo_exchange_plan,
+    make_sharded_scan_runner,
+    stripe_mesh,
+)
+from repro.fwi.solver import (
+    FWIConfig,
+    ShotState,
+    make_scan_runner,
+    ricker,
+    sponge_taper,
+    velocity_model,
+)
+from repro.kernels.stencil.ref import laplacian_roll
+
+
+def _seed_step_fn(cfg: FWIConfig):
+    """The seed engine's per-timestep function, verbatim: roll-based
+    laplacian, one jitted dispatch per step."""
+    v = velocity_model(cfg)
+    v2dt2 = (v * cfg.dt / cfg.dx) ** 2
+    sponge = sponge_taper(cfg)
+    wavelet = ricker(cfg)
+    pos = cfg.shot_positions()
+    src_z = jnp.asarray(pos[:, 0])
+    src_x = jnp.asarray(pos[:, 1])
+
+    def one_shot(p, p_prev, t, zi, xi):
+        lap = laplacian_roll(p)
+        p_next = (2.0 * p - p_prev + v2dt2 * lap) * sponge
+        p_damped = p * sponge
+        p_next = p_next.at[zi, xi].add(wavelet[t] * (cfg.dt ** 2))
+        return p_next, p_damped
+
+    @jax.jit
+    def step(p, p_prev, t):
+        p_next, p_damped = jax.vmap(
+            one_shot, in_axes=(0, 0, None, 0, 0)
+        )(p, p_prev, t, src_z, src_x)
+        return p_next, p_damped, p_next[:, cfg.receiver_depth, :]
+
+    return step
+
+
+def _best(fn, repeats: int = 5) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> list[str]:
+    rows = []
+    cfg = FWIConfig()                      # paper Table 2: 600x600, 4 shots
+    st = ShotState.init(cfg)
+    steps = 48
+
+    # --- seed per-step Python loop (incl. host-side trace stacking) ----
+    step = _seed_step_fn(cfg)
+    def loop():
+        p, pp, traces = st.p, st.p_prev, []
+        for t in range(steps):
+            p, pp, tr = step(p, pp, t)
+            traces.append(tr)
+        jax.block_until_ready(jnp.stack(traces, axis=1))
+    loop()                                 # compile
+    t_loop = _best(loop) / steps
+    loop_sps = 1.0 / t_loop
+    rows.append(f"fused_scan.loop_per_step,{t_loop * 1e6:.0f},"
+                f"{loop_sps:.1f}")
+
+    # --- scan-fused runner (traces inside the scan) --------------------
+    runner = make_scan_runner(cfg, collect_traces=True)
+    def scan():
+        jax.block_until_ready(runner(st.p, st.p_prev, 0, steps))
+    scan()                                 # compile
+    t_scan = _best(scan) / steps
+    scan_sps = 1.0 / t_scan
+    rows.append(f"fused_scan.scan_per_step,{t_scan * 1e6:.0f},"
+                f"{scan_sps:.1f}")
+    rows.append(f"fused_scan.speedup_x,0,{t_loop / t_scan:.2f}")
+
+    # --- exchange-every-step vs temporally-blocked (sharded) -----------
+    mesh = stripe_mesh(1)
+    blocked = {}
+    for k in (1, 4):
+        run_k, place, keff = make_sharded_scan_runner(cfg, mesh, k=k)
+        p, pp = place((st.p, st.p_prev))
+        blocks = steps // keff
+        def shard_run():
+            jax.block_until_ready(run_k(p, pp, 0, blocks))
+        shard_run()                        # compile
+        t_k = _best(shard_run) / (blocks * keff)
+        blocked[k] = t_k
+        plan = halo_exchange_plan(cfg, 1, k=keff)
+        rows.append(
+            f"fused_scan.sharded_k{k}_per_step,{t_k * 1e6:.0f},"
+            f"ppermutes_per_step={plan['ppermutes_per_step']}"
+        )
+    rows.append(f"fused_scan.temporal_block_speedup_x,0,"
+                f"{blocked[1] / blocked[4]:.2f}")
+    return rows

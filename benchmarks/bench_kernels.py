@@ -1,9 +1,18 @@
-"""Kernel micro-benchmarks (interpret mode on CPU).
+"""Kernel micro-benchmarks.
 
-Absolute times are CPU-interpret numbers — useful for relative tiling
-comparisons and regression tracking, NOT TPU projections (those come
-from the roofline analysis).  Each row also emits the kernel's
-arithmetic-intensity estimate (flops/byte) used to pick block shapes."""
+Interpret-mode vs compiled semantics: off-TPU, the Pallas kernels run in
+INTERPRET mode (auto-selected by ``stencil.kernel.default_interpret``) —
+the kernel body executes with real Pallas semantics (BlockSpec tiling,
+halo views, @pl.when predication are all exercised), but each grid step
+is a Python-driven emulation, so absolute ``*_pallas_*`` times here are
+one to two orders of magnitude above both the compiled-TPU times and the
+XLA-fused ``*_ref_*`` rows.  They are regression trackers for the
+kernels' *structure* (a tiling bug usually shows up as a blow-up), NOT
+TPU projections — those come from the roofline analysis.  On a TPU
+backend the same rows time the compiled kernels and are directly
+comparable.  Each row also emits the kernel's arithmetic-intensity
+estimate (flops/byte) used to pick block shapes; the stencil section
+additionally reports the ``autotune_bz`` winner for the paper grid."""
 from __future__ import annotations
 
 import time
@@ -14,7 +23,7 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention.ops import attention
 from repro.kernels.rmsnorm.ops import rmsnorm_residual
 from repro.kernels.ssd.ops import ssd_chunk
-from repro.kernels.stencil.ops import wave_step
+from repro.kernels.stencil.ops import autotune_bz, wave_step
 
 
 def _time(fn, *args, n=3, **kw):
@@ -40,6 +49,7 @@ def run() -> list[str]:
     rows += [
         f"kernels.stencil_ref_512,{us_ref:.0f},{flops / bytes_:.2f}",
         f"kernels.stencil_pallas_512,{us_pal:.0f},{flops / bytes_:.2f}",
+        f"kernels.stencil_autotune_bz_512,0,{autotune_bz(nz, nx)}",
     ]
     # flash attention 1x4x512x64
     q = jnp.ones((1, 4, 512, 64), jnp.float32)

@@ -15,7 +15,7 @@ from repro.core import (
     LogCapacityModel,
     StepTimeMonitor,
 )
-from repro.fwi.domain import halo_bytes_per_step
+from repro.fwi.domain import halo_bytes_per_step, halo_exchange_plan
 from repro.fwi.solver import FWIConfig
 
 
@@ -26,6 +26,16 @@ def run() -> list[str]:
     rows.append(f"overheads.halo_bytes_per_seam_step,0,{hb}")
     rows.append(f"overheads.halo_kb_per_seam_step,0,{hb / 1024:.1f}")
     rows.append("overheads.paper_claim_kb,0,21")
+    # temporal blocking: k x fewer seam messages per step (the slow-link
+    # cost is latency-dominated at 21 KB payloads)
+    for k in (1, 4):
+        plan = halo_exchange_plan(cfg, 4, k=k)
+        rows.append(
+            f"overheads.halo_plan_k{k},0,"
+            f"msgs_per_step={plan['ppermutes_per_step']:.2f};"
+            f"kb_per_exchange={plan['bytes_per_exchange'] / 1024:.1f};"
+            f"kb_per_step={plan['bytes_per_step'] / 1024:.1f}"
+        )
 
     # monitor + planner per-step cost
     mon = StepTimeMonitor()

@@ -8,6 +8,8 @@
   bench_envs            — Tables 1-2 (platform + workload configuration)
   bench_kernels         — Pallas kernel µbenches (interpret mode)
   bench_roofline        — EXPERIMENTS §Roofline from dry-run artifacts
+  bench_fused_scan      — scan-fused engine vs seed loop; temporal
+                          blocking vs per-step halo exchange
 """
 from __future__ import annotations
 
@@ -16,11 +18,13 @@ import traceback
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import (  # noqa: E402
     bench_burst_deadline,
     bench_capacity_fit,
     bench_envs,
+    bench_fused_scan,
     bench_gamma_fit,
     bench_kernels,
     bench_overheads,
@@ -34,6 +38,7 @@ BENCHES = [
     ("burst_deadline", bench_burst_deadline),
     ("overheads", bench_overheads),
     ("kernels", bench_kernels),
+    ("fused_scan", bench_fused_scan),
     ("roofline", bench_roofline),
 ]
 

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Tier-1 verification + benchmark smoke.
+#
+# 1. the repo's tier-1 test command (ROADMAP.md): full pytest, -x -q
+# 2. benchmark smoke: the fused-scan engine rows (steps/sec for
+#    loop-vs-scan, temporal blocking) and the §3.3 overhead rows must
+#    produce output without raising — this catches engine regressions
+#    that unit tests (which run tiny grids) would miss.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== benchmark smoke =="
+python - <<'EOF'
+import sys
+sys.path.insert(0, ".")
+from benchmarks import bench_fused_scan, bench_overheads
+
+rows = bench_overheads.run() + bench_fused_scan.run()
+for r in rows:
+    print(r)
+
+speedup = next(
+    float(r.rsplit(",", 1)[1]) for r in rows
+    if r.startswith("fused_scan.speedup_x")
+)
+print(f"scan-fused speedup over seed loop: {speedup:.2f}x")
+assert speedup > 1.0, "scan-fused engine slower than per-step loop"
+EOF
+echo "CI OK"

@@ -82,6 +82,10 @@ class CheckpointManager:
                 self._pending += 1
             self._q.put(job)
         else:
+            # a sync save may target the same step as a queued async one
+            # (periodic + final save); drain the worker first so both
+            # never race on the same step_*.tmp staging dir
+            self.wait()
             self._write(job)
 
     def wait(self):

@@ -1,0 +1,114 @@
+"""Version-compatibility shims for the installed JAX.
+
+``jax.shard_map`` graduated from ``jax.experimental.shard_map`` with a
+slightly different keyword surface (``axis_names``/``check_vma`` instead
+of ``auto``/``check_rep``).  Every module in this repo imports
+``shard_map`` from here so the same call sites run on both APIs:
+
+    from repro.compat import shard_map
+
+    shard_map(f, mesh=mesh, in_specs=..., out_specs=...,
+              axis_names={"pod"}, check_vma=False)
+
+On a JAX that only ships the experimental API, ``axis_names`` is
+translated to its complement (``auto`` = mesh axes NOT listed) and
+``check_vma`` maps onto ``check_rep``.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+
+_MANUAL_CTX = threading.local()
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None, check_rep=None):
+        """New-style ``jax.shard_map`` signature on the experimental API."""
+        kwargs = {}
+        manual = (
+            frozenset(axis_names) if axis_names is not None
+            else frozenset(mesh.axis_names)
+        )
+        if axis_names is not None:
+            kwargs["auto"] = frozenset(mesh.axis_names) - manual
+        if check_vma is None:
+            check_vma = check_rep
+        if check_vma is not None:
+            kwargs["check_rep"] = bool(check_vma)
+
+        def wrapped(*args):
+            # record the manual axis set for mesh_and_manual() while the
+            # body traces (the old API has no queryable abstract mesh)
+            prev = getattr(_MANUAL_CTX, "v", None)
+            _MANUAL_CTX.v = (mesh, manual)
+            try:
+                return f(*args)
+            finally:
+                _MANUAL_CTX.v = prev
+
+        return _exp_shard_map(
+            wrapped, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            **kwargs
+        )
+
+
+def mesh_and_manual(fallback_mesh=None):
+    """(mesh, manual axis names, constrainable) inside/outside shard_map.
+
+    New JAX: the abstract mesh plus its Manual-typed axes; sharding
+    constraints (with manual axes dropped from the spec) are legal inside
+    manual regions.  Old JAX: the physical mesh recorded by the compat
+    ``shard_map`` wrapper — but ``with_sharding_constraint`` inside a
+    manual region trips an XLA partitioner CHECK there, so
+    ``constrainable`` is False and callers must skip the (purely
+    performance) constraint.
+    """
+    gam = getattr(jax.sharding, "get_abstract_mesh", None)
+    if gam is not None:
+        am = gam()
+        manual = {
+            name
+            for name, t in zip(
+                getattr(am, "axis_names", ()), getattr(am, "axis_types", ())
+            )
+            if "Manual" in str(t)
+        }
+        return am, manual, True
+    ctx = getattr(_MANUAL_CTX, "v", None)
+    if ctx is not None:
+        return ctx[0], set(ctx[1]), False
+    return fallback_mesh, set(), True
+
+
+def axis_size(name) -> int:
+    """``jax.lax.axis_size`` with a legacy-JAX fallback (axis env)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    from jax._src import core as _core
+
+    return _core.get_axis_env().axis_sizes[name]
+
+
+def configure_partial_auto() -> None:
+    """Work around a GSPMD partitioner CHECK on legacy JAX.
+
+    On the experimental-shard_map JAX, differentiating a ``lax.scan``
+    inside a partial-auto region (manual over "pod", auto data/model)
+    aborts XLA with ``Check failed: sharding.IsManualSubgroup()``.  The
+    shardy partitioner handles the same program; opt into it when the
+    legacy API is in use.  Call once, before tracing any partial-auto
+    step function.  No-op on JAX with native ``jax.shard_map``.
+    """
+    if not hasattr(jax, "shard_map"):
+        jax.config.update("jax_use_shardy_partitioner", True)
+
+
+__all__ = [
+    "shard_map", "mesh_and_manual", "axis_size", "configure_partial_auto",
+]

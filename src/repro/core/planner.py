@@ -33,17 +33,29 @@ from repro.core.gamma import GammaModel
 
 @dataclasses.dataclass(frozen=True)
 class OverheadModel:
-    """Fixed + size-dependent burst overheads (seconds)."""
+    """Fixed + size-dependent burst overheads (seconds).
+
+    ``seam_latency_s``/``seam_syncs_per_step`` model the per-step halo
+    synchronization over the slow cross-environment link (paper §3.3's
+    21 KB message is latency-, not bandwidth-, dominated).  With the
+    temporally-blocked solver, ``seam_syncs_per_step`` is
+    ``halo_exchange_plan(...)["ppermutes_per_step"] / 2`` — k-step
+    blocking cuts the recurring burst tax k×."""
 
     ckpt_s: float = 10.0
     provision_s: float = 90.0           # slice spin-up
     restart_s: float = 30.0             # re-compile + re-shard + warmup
     transfer_bytes: float = 0.0         # checkpoint/state moved cross-env
     transfer_bw: float = 6.25e9         # DCI bytes/s
+    seam_latency_s: float = 0.0         # one cross-env halo round trip
+    seam_syncs_per_step: float = 1.0    # exchanges per timestep (1/k)
 
     def total(self) -> float:
         xfer = self.transfer_bytes / max(self.transfer_bw, 1.0)
         return self.ckpt_s + self.provision_s + self.restart_s + xfer
+
+    def seam_s_per_step(self) -> float:
+        return self.seam_latency_s * self.seam_syncs_per_step
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,6 +209,8 @@ class BurstPlanner:
         m = cluster_model or self.cluster_model
         t_cluster = m.predict_time(self.chips_cluster)
         # effective chips: burst chips are 1/K as productive per the
-        # correction factor (K >= 1 when the cloud is slower)
+        # correction factor (K >= 1 when the cloud is slower); every
+        # split step also pays the cross-env seam synchronization
         eff = self.chips_cluster + chips_burst / max(K, 1e-9)
-        return m.predict_time(eff) if eff > 0 else t_cluster
+        base = m.predict_time(eff) if eff > 0 else t_cluster
+        return base + self.overheads.seam_s_per_step()

@@ -1,16 +1,30 @@
-"""Striped domain decomposition + halo exchange (paper Fig. 2).
+"""Striped domain decomposition + temporally-blocked halo exchange
+(paper Fig. 2, communication-avoiding).
 
 The x-axis (width) is cut into contiguous column stripes, one per device
 on a 1-D ("stripe",) mesh; the height is fixed — exactly the paper's
-simplification.  Each timestep exchanges a 2-column halo with stripe
-neighbors via shard_map + lax.ppermute (the jax-native rendering of the
-MPI halo exchange), so per-step traffic is 2 columns × NZ × 4 B per
-neighbor pair — the TPU analogue of the paper's "total message size is
-only 21 KB" measurement, which bench_overheads.py reproduces.
+simplification.  The γ-split maps stripes to environments: with the
+right γ·(NX/stripes) columns assigned to burst-pod devices, only ONE
+stripe seam crosses the slow link (greedy striped placement, §3.3).
 
-The γ-split maps stripes to environments: with the right γ·(NX/stripes)
-columns assigned to burst-pod devices, only ONE stripe seam crosses the
-slow link (greedy striped placement, paper §3.3).
+Communication avoidance (the paper's "total message size is only 21 KB"
+measurement is about per-step seam LATENCY, which dominates over the
+slow cluster↔cloud link): instead of a 2-column (HALO) exchange every
+timestep, each stripe exchanges a k·HALO-wide halo ONCE and then runs k
+timesteps with ZERO communication.  Redundant halo cells evolve with
+true neighbor physics (the overlapped velocity/sponge fields carry real
+neighbor values); incorrect values creep inward from the overlap edge at
+HALO cells per step, so after k steps exactly the interior stripe is
+clean — standard overlapping ("ghost-zone") temporal blocking.  For
+k > 1 the previous-field edges ride in the SAME message (stacked), so
+ppermute invocations per timestep drop k× (2 per block vs 2 per step)
+while amortized bytes stay flat — the latency win the burst planner
+models via ``halo_exchange_plan``.
+
+Physical domain edges need no special-casing: the overlapped sponge is
+zero-padded outside the domain, so out-of-domain halo cells multiply to
+zero every inner step — identical to the reference's zero-halo
+convention.
 """
 from __future__ import annotations
 
@@ -21,8 +35,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import axis_size, shard_map
 from repro.fwi.solver import FWIConfig, ricker, sponge_taper, velocity_model
-from repro.kernels.stencil.ref import C0, C1, C2
+from repro.kernels.stencil.ops import wave_step
 
 HALO = 2
 
@@ -33,20 +48,19 @@ def stripe_mesh(n_devices: int | None = None) -> Mesh:
     return jax.make_mesh((n,), ("stripe",), devices=devs[:n])
 
 
-def _exchange_halo(p_local: jnp.ndarray, axis_name: str):
-    """p_local (..., NZ, NXl): returns (left_halo, right_halo) each
-    (..., NZ, HALO) received from stripe neighbors (zeros at domain edge).
-    """
+def _exchange_halo(edges_r: jnp.ndarray, edges_l: jnp.ndarray,
+                   axis_name: str):
+    """One packed bidirectional exchange.  ``edges_r``/``edges_l`` are
+    my right/left edge payloads (..., NZ, pad); returns what I receive
+    from my left/right neighbors, zeroed at the physical domain edge.
+    Exactly TWO ppermutes regardless of how many fields are packed in."""
     idx = jax.lax.axis_index(axis_name)
-    n = jax.lax.axis_size(axis_name)
-    right_edge = p_local[..., -HALO:]
-    left_edge = p_local[..., :HALO]
-    # send my right edge to my right neighbor (they receive left halo)
+    n = axis_size(axis_name)
     from_left = jax.lax.ppermute(
-        right_edge, axis_name, [(i, (i + 1) % n) for i in range(n)]
+        edges_r, axis_name, [(i, (i + 1) % n) for i in range(n)]
     )
     from_right = jax.lax.ppermute(
-        left_edge, axis_name, [(i, (i - 1) % n) for i in range(n)]
+        edges_l, axis_name, [(i, (i - 1) % n) for i in range(n)]
     )
     zero = jnp.zeros_like(from_left)
     left_halo = jnp.where(idx == 0, zero, from_left)
@@ -54,84 +68,213 @@ def _exchange_halo(p_local: jnp.ndarray, axis_name: str):
     return left_halo, right_halo
 
 
-def _lap_with_halo(pext: jnp.ndarray, nxl: int) -> jnp.ndarray:
-    """pext (..., NZ, NXl + 2*HALO) -> 4th-order laplacian (..., NZ, NXl).
-
-    x-direction uses the halo-extended array; z-direction uses in-stripe
-    shifts with zero boundary (stripes span full height)."""
-    c = pext[..., HALO: HALO + nxl]
-
-    def shift_z(a, d):
-        out = jnp.roll(a, d, axis=-2)
-        if d > 0:
-            return out.at[..., :d, :].set(0.0)
-        return out.at[..., d:, :].set(0.0)
-
-    lap = 2.0 * C0 * c
-    lap += C1 * (pext[..., HALO - 1: HALO - 1 + nxl]
-                 + pext[..., HALO + 1: HALO + 1 + nxl])
-    lap += C2 * (pext[..., HALO - 2: HALO - 2 + nxl]
-                 + pext[..., HALO + 2: HALO + 2 + nxl])
-    lap += C1 * (shift_z(c, 1) + shift_z(c, -1))
-    lap += C2 * (shift_z(c, 2) + shift_z(c, -2))
-    return lap
+def _overlapped_field(arr: np.ndarray, n: int, pad: int) -> jnp.ndarray:
+    """(NZ, NX) -> (n, NZ, NXl + 2·pad) per-stripe windows with real
+    neighbor values in the overlap and zeros outside the domain."""
+    nz, nx = arr.shape
+    nxl = nx // n
+    a = np.pad(np.asarray(arr), ((0, 0), (pad, pad)))
+    return jnp.asarray(np.stack(
+        [a[:, i * nxl: i * nxl + nxl + 2 * pad] for i in range(n)]
+    ), jnp.float32)
 
 
-def make_sharded_step(cfg: FWIConfig, mesh: Mesh):
-    """Sharded timestep: fields (S, NZ, NX) sharded on x over "stripe"."""
+def effective_block(cfg: FWIConfig, n_stripes: int, k: int) -> int:
+    """Clamp k so the k·HALO overlap fits inside one stripe."""
+    nxl = cfg.nx // n_stripes
+    return max(1, min(k, nxl // HALO))
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_block_parts(cfg: FWIConfig, mesh: Mesh, k: int,
+                         use_pallas: bool):
+    """(sm, v2e_all, spe_all, place, k): the UNJITTED shard_map'd k-step
+    body plus its closure fields — callers jit at their own boundary
+    (wrapping the body in its own jit inside a lax.scan defeats XLA's
+    loop fusion; see solver.py)."""
     n = mesh.shape["stripe"]
     assert cfg.nx % n == 0, (cfg.nx, n)
     nxl = cfg.nx // n
+    k = effective_block(cfg, n, k)
+    pad = k * HALO
     v = velocity_model(cfg)
     v2dt2 = (v * cfg.dt / cfg.dx) ** 2
     sponge = sponge_taper(cfg)
+    v2e_all = _overlapped_field(np.asarray(v2dt2), n, pad)
+    spe_all = _overlapped_field(np.asarray(sponge), n, pad)
     wavelet = ricker(cfg)
     pos = cfg.shot_positions()
     src_z = jnp.asarray(pos[:, 0])
     src_x = jnp.asarray(pos[:, 1])
     sh = NamedSharding(mesh, P(None, None, "stripe"))
-    rep = NamedSharding(mesh, P())
 
-    def local_step(p, p_prev, v2, sp, t):
-        # p (S, NZ, NXl) local stripe
-        left, right = _exchange_halo(p, "stripe")
-        pext = jnp.concatenate([left, p, right], axis=-1)
-        lap = _lap_with_halo(pext, p.shape[-1])
-        p_next = (2.0 * p - p_prev + v2 * lap) * sp
-        p_damped = p * sp
-        # source injection: global x position -> local column if owned
+    def local_block(p, p_prev, v2e, spe, t0):
+        # p (S, NZ, NXl) local stripe; v2e/spe (1, NZ, NXl + 2·pad)
+        v2e, spe = v2e[0], spe[0]
         idx = jax.lax.axis_index("stripe")
-        x0 = idx * p.shape[-1]
-        src = wavelet[t] * (cfg.dt ** 2)
+        # ONE exchange for the whole k-step block; for k > 1 the p_prev
+        # edges ride in the same message (leading stacked axis)
+        if k > 1:
+            er = jnp.stack([p[..., -pad:], p_prev[..., -pad:]])
+            el = jnp.stack([p[..., :pad], p_prev[..., :pad]])
+            left, right = _exchange_halo(er, el, "stripe")
+            pe = jnp.concatenate([left[0], p, right[0]], axis=-1)
+            ppe = jnp.concatenate([left[1], p_prev, right[1]], axis=-1)
+        else:
+            left, right = _exchange_halo(
+                p[..., -pad:], p[..., :pad], "stripe"
+            )
+            pe = jnp.concatenate([left, p, right], axis=-1)
+            # k=1 never reads the p_prev halo (halo outputs are
+            # discarded after one step) — zero-extend
+            zl = jnp.zeros_like(p_prev[..., :pad])
+            ppe = jnp.concatenate([zl, p_prev, zl], axis=-1)
 
-        def inject(pn, zi, xi):
-            owned = (xi >= x0) & (xi < x0 + pn.shape[-1])
-            xloc = jnp.clip(xi - x0, 0, pn.shape[-1] - 1)
+        x0 = idx * nxl - pad          # global x of extended column 0
+        width = nxl + 2 * pad
+
+        if use_pallas:
+            # the Pallas kernel is 2-D (NZ, W); map over shots
+            step_fields = jax.vmap(
+                lambda a, b: wave_step(a, b, v2e, spe, use_pallas=True)
+            )
+        else:
+            def step_fields(a, b):
+                return wave_step(a, b, v2e, spe)
+
+        def inject(pn, zi, xi, src):
+            owned = (xi >= x0) & (xi < x0 + width)
+            xloc = jnp.clip(xi - x0, 0, width - 1)
             return pn.at[zi, xloc].add(jnp.where(owned, src, 0.0))
 
-        p_next = jax.vmap(inject)(p_next, src_z, src_x)
-        trace = p_next[:, cfg.receiver_depth, :]
-        return p_next, p_damped, trace
+        traces = []
+        for j in range(k):
+            pn, pd = step_fields(pe, ppe)
+            # sources must land in the halo overlap too, so redundant
+            # cells track true neighbor physics
+            src = wavelet[jnp.clip(t0 + j, 0, cfg.timesteps - 1)] \
+                * (cfg.dt ** 2)
+            pn = jax.vmap(inject, in_axes=(0, 0, 0, None))(
+                pn, src_z, src_x, src
+            )
+            traces.append(pn[:, cfg.receiver_depth, pad: pad + nxl])
+            pe, ppe = pn, pd
+        tr = jnp.stack(traces, axis=1)          # (S, k, NXl)
+        return (pe[..., pad: pad + nxl], ppe[..., pad: pad + nxl], tr)
 
-    step = jax.shard_map(
-        local_step,
+    sm = shard_map(
+        local_block,
         mesh=mesh,
         in_specs=(P(None, None, "stripe"), P(None, None, "stripe"),
-                  P(None, "stripe"), P(None, "stripe"), P()),
+                  P("stripe", None, None), P("stripe", None, None), P()),
         out_specs=(P(None, None, "stripe"), P(None, None, "stripe"),
-                   P(None, "stripe")),
+                   P(None, None, "stripe")),
+        # pallas_call has no replication-checking rule; the body is
+        # replication-safe by construction (everything is stripe-local)
+        check_vma=False,
     )
-
-    @jax.jit
-    def sharded_step(p, p_prev, t):
-        return step(p, p_prev, v2dt2, sponge, t)
 
     def place(state_fields):
         return jax.device_put(state_fields, sh)
 
-    return sharded_step, place
+    return sm, v2e_all, spe_all, place, k
 
 
-def halo_bytes_per_step(cfg: FWIConfig, n_stripes: int) -> int:
-    """Per-seam traffic — the paper's 21 KB message-size claim analogue."""
-    return 2 * HALO * cfg.nz * cfg.n_shots * 4  # send+recv, f32
+@functools.lru_cache(maxsize=32)
+def make_sharded_multistep(cfg: FWIConfig, mesh: Mesh, *, k: int = 1,
+                           use_pallas: bool = False):
+    """Temporally-blocked sharded propagator.
+
+    Returns (block_step, place): ``block_step(p, p_prev, t0)`` advances
+    ALL k timesteps with a single packed halo exchange and returns
+    (p, p_prev, traces) with traces (S, k, NX).  Fields are (S, NZ, NX)
+    sharded on x over "stripe".
+
+    The requested k may be clamped so the overlap fits in one stripe
+    (``effective_block``); callers advancing t0 must use the EFFECTIVE
+    block size, exposed as ``block_step.k``.
+    """
+    sm, v2e_all, spe_all, place, k = _sharded_block_parts(
+        cfg, mesh, k, use_pallas
+    )
+
+    jit_block = jax.jit(
+        lambda p, p_prev, t0: sm(p, p_prev, v2e_all, spe_all, t0)
+    )
+
+    def block_step(p, p_prev, t0):
+        return jit_block(p, p_prev, t0)
+
+    block_step.k = k
+    return block_step, place
+
+
+@functools.lru_cache(maxsize=32)
+def make_sharded_step(cfg: FWIConfig, mesh: Mesh, *,
+                      use_pallas: bool = False):
+    """Single-timestep sharded propagator (k=1 temporal block) — the
+    seed-compatible interface: step(p, p_prev, t) -> (p, p_prev, trace)
+    with trace (S, NX)."""
+    block_step, place = make_sharded_multistep(
+        cfg, mesh, k=1, use_pallas=use_pallas
+    )
+
+    @jax.jit
+    def step(p, p_prev, t):
+        pn, pp, tr = block_step(p, p_prev, t)
+        return pn, pp, tr[:, 0]
+
+    return step, place
+
+
+@functools.lru_cache(maxsize=32)
+def make_sharded_scan_runner(cfg: FWIConfig, mesh: Mesh, *, k: int = 4,
+                             use_pallas: bool = False):
+    """Scan-fused temporally-blocked runner: run(p, p_prev, t0, blocks)
+    advances blocks·k timesteps in ONE dispatch (a lax.scan over k-step
+    blocks, one packed halo exchange per block).  Returns
+    (p, p_prev, traces (S, blocks·k, NX))."""
+    sm, v2e_all, spe_all, place, k = _sharded_block_parts(
+        cfg, mesh, k, use_pallas
+    )
+
+    @functools.partial(jax.jit, static_argnames=("blocks",))
+    def run(p, p_prev, t0, blocks: int):
+        def body(carry, b):
+            p, pp = carry
+            pn, pd, tr = sm(p, pp, v2e_all, spe_all, t0 + b * k)
+            return (pn, pd), tr
+
+        (p, pp), traces = jax.lax.scan(
+            body, (p, p_prev), jnp.arange(blocks)
+        )
+        # (blocks, S, k, NX) -> (S, blocks·k, NX)
+        traces = jnp.moveaxis(traces, 0, 1)
+        traces = traces.reshape(traces.shape[0], -1, traces.shape[-1])
+        return p, pp, traces
+
+    return run, place, k
+
+
+def halo_bytes_per_step(cfg: FWIConfig, n_stripes: int, k: int = 1) -> int:
+    """Per-seam traffic amortized per timestep — the paper's 21 KB
+    message-size claim analogue.  k=1 exchanges only the p edges; k>1
+    packs p and p_prev edges into the same (k·HALO-wide) message.
+    Delegates to ``halo_exchange_plan`` so the effective-block clamp
+    applies here too."""
+    return int(halo_exchange_plan(cfg, n_stripes, k)["bytes_per_step"])
+
+
+def halo_exchange_plan(cfg: FWIConfig, n_stripes: int, k: int = 1) -> dict:
+    """Seam-traffic model for the burst planner / overhead benches."""
+    k = effective_block(cfg, n_stripes, k)
+    fields = 1 if k == 1 else 2
+    per_exchange = 2 * fields * k * HALO * cfg.nz * cfg.n_shots * 4
+    return {
+        "k": k,
+        "steps_per_exchange": k,
+        "ppermutes_per_exchange": 2,
+        "ppermutes_per_step": 2.0 / k,
+        "bytes_per_exchange": per_exchange,
+        "bytes_per_step": per_exchange / k,
+    }

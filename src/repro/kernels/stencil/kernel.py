@@ -4,22 +4,38 @@ TPU adaptation of the paper's (CPU/MPI, Eigen-based) FWI hot loop —
 re-blocked for the TPU memory hierarchy instead of ported:
 
 * Row-strip tiling: each grid step owns a (BZ, NX) strip resident in
-  VMEM.  The ±2-row z-halo comes from neighbor-strip views of the same
-  input (three BlockSpecs with clamped index maps) — x-halo needs no
-  exchange because strips span the full width, matching the paper's
-  striped second-level partitioning that minimizes communication.
+  VMEM.  The pressure field is passed ONCE with a whole-array BlockSpec
+  whose index map is constant — the pipeline fetches it a single time
+  and every grid step slices its strip plus the ±HALO neighbor rows out
+  of the resident copy.  (The seed version passed `p` through THREE
+  aliased BlockSpecs — center/up/down neighbor views — which costs 3×
+  the HBM reads of the field per step; for a memory-bound stencil that
+  was most of the budget.)  x-halo needs no exchange because strips span
+  the full width, matching the paper's striped second-level partitioning
+  that minimizes communication.
 * One fused pass: Laplacian + leapfrog update + sponge damping for BOTH
   outputs (p_next, p_damped) — the fields are read once from HBM per
   step, which is the whole battle for a memory-bound stencil.
 * f32 compute; (8,128)-aligned strips (BZ multiple of 8, NX multiple of
   128) keep loads/stores VPU-lane aligned.
+* `interpret` auto-selects from the backend: compiled on TPU, interpret
+  mode elsewhere (the kernel body runs with real Pallas semantics on
+  CPU, validating the BlockSpec/halo logic).  `autotune_bz` sweeps strip
+  heights and memoizes the fastest — the block-shape knob the ROADMAP's
+  "fast as the hardware allows" goal turns.
 
 Physical-boundary strips (first/last) zero their out-of-domain halo
-rows via @pl.when, reproducing ref.py's zero-halo convention exactly.
+rows, reproducing ref.py's zero-halo convention exactly.
+
+Capacity note: the constant-map whole-array spec keeps the full field
+in VMEM (NZ·NX·4 B — 1.4 MB for the paper's 600² grid, comfortably
+under the ~16 MB/core budget).  Grids beyond ~1.8k² would need a
+second-level z-split on top.
 """
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -31,19 +47,39 @@ C2 = -1.0 / 12.0
 HALO = 2
 
 
+def default_interpret() -> bool:
+    """Compiled on TPU, interpret mode everywhere else."""
+    return jax.default_backend() != "tpu"
+
+
+def pick_bz(nz: int, cap: int = 128) -> int:
+    """Largest divisor of nz ≤ cap, preferring (8,128)-aligned strips.
+
+    Never returns a strip shorter than HALO — the kernel's clamped
+    neighbor-row slices assume bz ≥ HALO, so a 1-row strip (e.g. prime
+    nz > cap) would silently corrupt the stencil; such grids fall back
+    to a single whole-height strip instead."""
+    aligned = [b for b in range(8, cap + 1, 8) if nz % b == 0]
+    if aligned:
+        return max(aligned)
+    ok = [b for b in range(HALO, cap + 1) if nz % b == 0]
+    return max(ok) if ok else nz
+
+
 def _wave_kernel(
-    p_c_ref, p_up_ref, p_dn_ref, p_prev_ref, v2dt2_ref, sponge_ref,
-    p_next_ref, p_damped_ref,
+    p_ref, p_prev_ref, v2dt2_ref, sponge_ref, p_next_ref, p_damped_ref,
+    *, bz: int,
 ):
     i = pl.program_id(0)
     n = pl.num_programs(0)
-    bz = p_c_ref.shape[0]
-    nx = p_c_ref.shape[1]
+    nz = p_ref.shape[0]
+    nx = p_ref.shape[1]
+    row0 = i * bz
 
-    center = p_c_ref[...]
-
-    up = p_up_ref[pl.ds(bz - HALO, HALO), :]           # last rows of strip i-1
-    dn = p_dn_ref[pl.ds(0, HALO), :]                   # first rows of strip i+1
+    # one resident copy of p serves center AND both halo views
+    center = p_ref[pl.ds(pl.multiple_of(row0, bz), bz), :]
+    up = p_ref[pl.ds(jnp.maximum(row0 - HALO, 0), HALO), :]
+    dn = p_ref[pl.ds(jnp.minimum(row0 + bz, nz - HALO), HALO), :]
     zero_h = jnp.zeros((HALO, nx), center.dtype)
     up = jnp.where(i == 0, zero_h, up)                 # physical boundary
     dn = jnp.where(i == n - 1, zero_h, dn)
@@ -81,26 +117,59 @@ def wave_step_pallas(
     v2dt2: jax.Array,
     sponge: jax.Array,
     *,
-    bz: int = 128,
-    interpret: bool = True,
+    bz: int | None = None,
+    interpret: bool | None = None,
 ):
     nz, nx = p.shape
+    if bz is None:
+        bz = pick_bz(nz)
+    if interpret is None:
+        interpret = default_interpret()
     assert nz % bz == 0, (nz, bz)
+    assert bz >= HALO, (bz, HALO)   # clamped halo slices need bz >= HALO
     grid = (nz // bz,)
+    whole = pl.BlockSpec((nz, nx), lambda i: (0, 0))   # fetched once
     strip = pl.BlockSpec((bz, nx), lambda i: (i, 0))
-    up = pl.BlockSpec((bz, nx), lambda i: (jnp.maximum(i - 1, 0), 0))
-    dn = pl.BlockSpec(
-        (bz, nx), lambda i: (jnp.minimum(i + 1, nz // bz - 1), 0)
-    )
     out_shape = [
         jax.ShapeDtypeStruct((nz, nx), p.dtype),
         jax.ShapeDtypeStruct((nz, nx), p.dtype),
     ]
     return pl.pallas_call(
-        _wave_kernel,
+        functools.partial(_wave_kernel, bz=bz),
         grid=grid,
-        in_specs=[strip, up, dn, strip, strip, strip],
+        in_specs=[whole, strip, strip, strip],
         out_specs=[strip, strip],
         out_shape=out_shape,
         interpret=interpret,
-    )(p, p, p, p_prev, v2dt2, sponge)
+    )(p, p_prev, v2dt2, sponge)
+
+
+@functools.lru_cache(maxsize=None)
+def autotune_bz(
+    nz: int, nx: int, candidates: tuple[int, ...] = (8, 16, 32, 64, 128),
+    repeats: int = 3,
+) -> int:
+    """Sweep strip heights on this backend, return the fastest.
+
+    Wall-clock autotune over the real kernel (interpret mode off-TPU, so
+    absolute numbers are NOT TPU projections — but the relative ranking
+    tracks the tiling trade-off).  Memoized per (nz, nx, candidates)."""
+    cands = [b for b in candidates if nz % b == 0]
+    if not cands:
+        return pick_bz(nz)
+    key = jax.random.key(0)
+    p = jax.random.normal(key, (nz, nx), jnp.float32)
+    args = (p, p, jnp.full((nz, nx), 0.1, jnp.float32),
+            jnp.ones((nz, nx), jnp.float32))
+    best_bz, best_t = cands[0], float("inf")
+    for b in cands:
+        out = wave_step_pallas(*args, bz=b)       # compile
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = wave_step_pallas(*args, bz=b)
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / repeats
+        if dt < best_t:
+            best_bz, best_t = b, dt
+    return best_bz

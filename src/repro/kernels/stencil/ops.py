@@ -1,21 +1,33 @@
 """Jit'd wrapper for the wave-step kernel with a portable fallback.
 
-use_pallas=True runs the Pallas kernel (interpret mode on CPU — the
-kernel body executes with real Pallas semantics, validating BlockSpec
-tiling/halo logic); use_pallas=False is the pure-jnp oracle used in the
-sharded solver (XLA fuses it adequately for the dry-run; the Pallas
-path is the TPU deployment target).
+use_pallas=True runs the Pallas kernel; ``interpret`` auto-selects from
+the backend (compiled on TPU; interpret mode elsewhere, where the kernel
+body still executes with real Pallas semantics, validating BlockSpec
+tiling/halo logic).  ``bz=None`` picks an aligned strip height via
+``pick_bz`` (or run ``autotune_bz`` for a measured choice).
+use_pallas=False is the pure-jnp oracle used on CPU paths (XLA fuses it
+adequately; the Pallas path is the TPU deployment target).
 """
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.stencil.kernel import wave_step_pallas
+from repro.kernels.stencil.kernel import (
+    autotune_bz,
+    default_interpret,
+    pick_bz,
+    wave_step_pallas,
+)
 from repro.kernels.stencil.ref import wave_step_ref
+
+__all__ = [
+    "wave_step", "wave_step_jit", "wave_step_pallas",
+    "autotune_bz", "default_interpret", "pick_bz",
+]
 
 
 def wave_step(p, p_prev, v2dt2, sponge, *, use_pallas=False,
-              bz: int = 128, interpret: bool = True):
+              bz: int | None = None, interpret: bool | None = None):
     if use_pallas:
         out = wave_step_pallas(
             p, p_prev, v2dt2, sponge, bz=bz, interpret=interpret

@@ -38,7 +38,7 @@ from repro.configs import (
     get_config,
     input_specs,
 )
-from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.hlo_cost import analyze as hlo_analyze, xla_cost_analysis
 from repro.launch.hw import TPU_V5E
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import model_flops, roofline_terms
@@ -197,7 +197,7 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
     # NOTE: compiled.cost_analysis() counts while bodies ONCE — with
     # scan-over-layers that undercounts ~num_layers×.  launch/hlo_cost.py
     # multiplies trip counts; raw values kept for reference.
-    ca = compiled.cost_analysis() or {}
+    ca = xla_cost_analysis(compiled) or {}
     hlo = compiled.as_text()
     t0 = time.time()
     hc = hlo_analyze(hlo, total_devices=chips, pod_size=256)

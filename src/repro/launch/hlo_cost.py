@@ -423,10 +423,10 @@ class HloCostModel:
         if op.opcode in ("convert", "copy", "transpose", "bitcast",
                          "reshape") and op.operands:
             src = op.operands[0]
-        elif op.opcode == "fusion":
-            m = re.search(r"calls=%([\w.\-]+)", op.attrs)
+        elif op.opcode in ("fusion", "call"):
+            m = re.search(r"(?:calls|to_apply)=%([\w.\-]+)", op.attrs)
             if m and self._is_layout_comp(m.group(1)) and op.operands:
-                # single-input layout fusion: step through
+                # single-input layout fusion/call: step through
                 big = max(
                     op.operands,
                     key=lambda o: _flat_bytes(
@@ -458,8 +458,8 @@ class HloCostModel:
         if op.opcode in ("convert", "copy", "bitcast", "transpose",
                          "reshape") and op.operands:
             return self._is_source_read(comp, op.operands[0], depth + 1)
-        if op.opcode == "fusion":
-            m = re.search(r"calls=%([\w.\-]+)", op.attrs)
+        if op.opcode in ("fusion", "call"):
+            m = re.search(r"(?:calls|to_apply)=%([\w.\-]+)", op.attrs)
             if m and self._is_layout_comp(m.group(1)) and op.operands:
                 big = max(
                     op.operands,
@@ -631,6 +631,12 @@ class HloCostModel:
         if op.opcode in ("call", "async-start"):
             tgt = refs.get("calls") or refs.get("to_apply")
             if tgt:
+                if self._is_layout_comp(tgt):
+                    # CPU-XLA wraps parallelized converts/copies in a
+                    # `call` (e.g. %parallel_convert): pure layout work
+                    # that the TPU fuses into the consumer — charge zero
+                    # (consumers resolve through it to the source width)
+                    return
                 cost.add(self.comp_cost(tgt))
             return
 
@@ -735,6 +741,16 @@ class HloCostModel:
 
     def entry_cost(self) -> Cost:
         return self.comp_cost(self.entry)
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across JAX versions —
+    older releases return a one-dict-per-partition list, newer ones a
+    plain dict.  Callers always get the dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca
 
 
 def analyze(text: str, *, total_devices: int, pod_size: int = 256) -> dict:

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import configure_partial_auto, mesh_and_manual, shard_map
 from repro.configs.base import BlockDef, ModelConfig, RunConfig
 from repro.models import model as M
 from repro.models.layers import apply_norm, embed_tokens
@@ -74,6 +75,10 @@ def build_pipeline_train_step(
 ):
     """Returns (step_fn, state_in_specs) — step_fn(state, batch) with the
     state's block params stage-sharded over 'pod'."""
+    # this builder constructs a grad-of-scan inside a partial-auto
+    # region — opt into the partitioner that can compile it on legacy
+    # JAX (no-op on jax.shard_map-native versions)
+    configure_partial_auto()
     assert pipeline_compatible(cfg), cfg.name
     mesh = rules.mesh
     stages = mesh.shape.get("pod", 1)
@@ -93,9 +98,11 @@ def build_pipeline_train_step(
     )
     fwd_perm = [(i, i + 1) for i in range(stages - 1)]
 
-    def loss_fn(params, batch):
-        # manual over pod: params['b0'] holds THIS stage's layer slice
-        sid = jax.lax.axis_index("pod")
+    def loss_fn(params, batch, sid):
+        # manual over pod: params['b0'] holds THIS stage's layer slice;
+        # sid arrives as data (a P("pod")-sharded arange) rather than
+        # lax.axis_index — partition-id lowering is not portable across
+        # partitioners (see compat.configure_partial_auto)
         tokens = batch["tokens"]                   # (B, S) pod-replicated
         mask = batch.get("loss_mask")
         if mask is None:
@@ -160,7 +167,8 @@ def build_pipeline_train_step(
         loss = nll / jnp.maximum(cnt, 1.0) + aux
         return loss, {"loss": loss, "nll_sum": nll, "token_count": cnt}
 
-    def inner(state, batch):
+    def inner(state, batch, sid_arr):
+        sid = sid_arr[0]
         with axis_rules(inner_rules):
             # within-pod FSDP/TP of the stage's weights: the manual pod
             # split leaves them replicated over (data, model) otherwise
@@ -169,9 +177,11 @@ def build_pipeline_train_step(
             from repro.sharding.rules import param_pspecs
 
             pspecs = param_pspecs(M.schema(cfg), inner_rules)
-            am = jax.sharding.get_abstract_mesh()
+            am, _, constrainable = mesh_and_manual(mesh)
 
             def constrain(x, spec):
+                if not constrainable:
+                    return x
                 return jax.lax.with_sharding_constraint(
                     x, NamedSharding(am, spec)
                 )
@@ -181,7 +191,7 @@ def build_pipeline_train_step(
                 constrain, state["params"], pspecs
             )
             (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True
+                lambda p, b: loss_fn(p, b, sid), has_aux=True
             )(state["params"], batch)
             # shared (pod-replicated) params: sum partial grads across
             # stages; stage-local layer grads stay local (the PP win)
@@ -212,13 +222,14 @@ def build_pipeline_train_step(
 
     def step(state, batch):
         batch_specs = jax.tree.map(lambda _: P(), batch)
-        return jax.shard_map(
+        sid_in = jnp.arange(stages, dtype=jnp.int32)
+        return shard_map(
             inner,
             mesh=mesh,
-            in_specs=(state_specs, batch_specs),
+            in_specs=(state_specs, batch_specs, P("pod")),
             out_specs=(state_specs, P()),
             axis_names={"pod"},
             check_vma=False,
-        )(state, batch)
+        )(state, batch, sid_in)
 
     return step, state_specs

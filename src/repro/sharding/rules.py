@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import mesh_and_manual
+
 # ---------------------------------------------------------------------------
 # Rule tables
 # ---------------------------------------------------------------------------
@@ -213,14 +215,9 @@ def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
     if rules is None:
         return x
     spec = rules.spec(logical_axes, x.shape)
-    am = jax.sharding.get_abstract_mesh()
-    manual = {
-        name
-        for name, t in zip(
-            getattr(am, "axis_names", ()), getattr(am, "axis_types", ())
-        )
-        if "Manual" in str(t)
-    }
+    am, manual, constrainable = mesh_and_manual(rules.mesh)
+    if not constrainable:
+        return x
     if manual:
         parts = []
         for p_ in tuple(spec):

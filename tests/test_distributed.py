@@ -106,6 +106,8 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import RunConfig, get_config, smoke_config
 from repro.configs.shapes import ShapeConfig
 from repro.data.pipeline import SyntheticLMPipeline
+from repro.compat import configure_partial_auto, shard_map
+configure_partial_auto()
 from repro.optim.compression import cross_pod_reduce
 from repro.runtime.train_step import batch_shardings, compute_grads
 from repro.sharding.rules import axis_rules, init_params, make_rules
@@ -143,9 +145,9 @@ def make_manual(method):
     def f(p, b):
         pspec = jax.tree.map(lambda _: P(), p)
         bspec = jax.tree.map(lambda x: P("pod") if x.ndim else P(), b)
-        return jax.shard_map(inner, mesh=mesh, in_specs=(pspec, bspec),
-                             out_specs=pspec, axis_names={"pod"},
-                             check_vma=False)(p, b)
+        return shard_map(inner, mesh=mesh, in_specs=(pspec, bspec),
+                         out_specs=pspec, axis_names={"pod"},
+                         check_vma=False)(p, b)
     return jax.jit(f)
 
 grads_exact = make_manual("none")(params, batch)
@@ -231,6 +233,8 @@ from repro.configs.base import BlockDef
 from repro.configs.shapes import ShapeConfig
 from repro.data.pipeline import SyntheticLMPipeline
 from repro.optim import constant, make_optimizer
+from repro.compat import configure_partial_auto
+configure_partial_auto()
 from repro.runtime.pipeline import build_pipeline_train_step
 from repro.runtime.train_step import build_train_step, state_schema
 from repro.sharding.rules import init_params, make_rules

@@ -1,0 +1,289 @@
+"""Scan-fused, communication-avoiding propagation engine tests.
+
+Equivalence ladder for the fused engine:
+  pad-slice laplacian  == roll laplacian          (bitwise)
+  scan-runner          == per-step jitted loop    (bitwise, incl. traces)
+  k-step temporal block == k sequential ref steps (several k / stripes)
+  pallas kernel        == ref across bz choices   (new single-input spec)
+plus the communication claims: ppermute count per timestep drops k×,
+and the halo-plan bookkeeping matches the lowered HLO.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fwi.domain import (
+    effective_block,
+    halo_bytes_per_step,
+    halo_exchange_plan,
+    make_sharded_multistep,
+    make_sharded_scan_runner,
+    stripe_mesh,
+)
+from repro.fwi.solver import (
+    FWIConfig,
+    ShotState,
+    make_scan_runner,
+    make_step_fn,
+    run_forward,
+    velocity_model,
+)
+from repro.kernels.stencil.ref import laplacian, laplacian_roll
+
+CFG = FWIConfig(nz=64, nx=128, timesteps=48, n_shots=2, sponge_width=8)
+
+
+# ------------------------------------------------------------ solver layer
+
+
+def test_laplacian_pad_equals_roll_bitwise():
+    p = jax.random.normal(jax.random.key(3), (2, 96, 80), jnp.float32)
+    a = laplacian_roll(p)
+    b = laplacian(p)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scan_runner_traces_equal_per_step_loop():
+    """The fused scan must reproduce the per-step dispatch loop exactly,
+    receiver traces included."""
+    step = make_step_fn(CFG)
+    st = ShotState.init(CFG)
+    p, pp = st.p, st.p_prev
+    traces = []
+    for t in range(CFG.timesteps):
+        p, pp, tr = step(p, pp, t)
+        traces.append(tr)
+    loop_tr = jnp.stack(traces, axis=1)
+    st_scan, scan_tr = run_forward(CFG)
+    np.testing.assert_array_equal(np.asarray(st_scan.p), np.asarray(p))
+    np.testing.assert_array_equal(np.asarray(scan_tr), np.asarray(loop_tr))
+
+
+def test_scan_runner_restart_offset_no_retrace():
+    """t0 is traced: restarting mid-run reuses the compiled runner and
+    matches the straight-through run bit-for-bit."""
+    run = make_scan_runner(CFG, collect_traces=True)
+    st = ShotState.init(CFG)
+    p_a, pp_a, tr_a = run(st.p, st.p_prev, 0, 48)
+    p_b, pp_b, tr1 = run(st.p, st.p_prev, 0, 24)
+    p_b, pp_b, tr2 = run(p_b, pp_b, 24, 24)
+    np.testing.assert_array_equal(np.asarray(p_a), np.asarray(p_b))
+    np.testing.assert_array_equal(
+        np.asarray(tr_a), np.asarray(jnp.concatenate([tr1, tr2], axis=1))
+    )
+
+
+def test_model_building_memoized():
+    assert velocity_model(CFG) is velocity_model(CFG)
+    assert make_scan_runner(CFG) is make_scan_runner(CFG)
+    assert make_step_fn(CFG) is make_step_fn(CFG)
+
+
+# ------------------------------------------------- temporal blocking layer
+
+
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_temporal_block_equals_sequential_ref(k):
+    """One k-step block (single halo exchange) == k sequential reference
+    steps, to well under the 1e-4 acceptance tolerance."""
+    ref, ref_tr = run_forward(CFG, steps=CFG.timesteps)
+    mesh = stripe_mesh(1)
+    blk, place = make_sharded_multistep(CFG, mesh, k=k)
+    s = ShotState.init(CFG)
+    p, pp = place((s.p, s.p_prev))
+    trs = []
+    for b in range(CFG.timesteps // k):
+        p, pp, tr = blk(p, pp, b * k)
+        trs.append(tr)
+    tr = jnp.concatenate(trs, axis=1)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(ref.p), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(tr), np.asarray(ref_tr),
+                               atol=1e-6)
+
+
+def test_sharded_scan_runner_equals_reference():
+    ref, ref_tr = run_forward(CFG, steps=CFG.timesteps)
+    run, place, k = make_sharded_scan_runner(CFG, stripe_mesh(1), k=4)
+    s = ShotState.init(CFG)
+    p, pp = place((s.p, s.p_prev))
+    p, pp, tr = run(p, pp, 0, CFG.timesteps // k)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(ref.p), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(tr), np.asarray(ref_tr),
+                               atol=1e-6)
+
+
+_MULTI_STRIPE_BLOCKED = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, sys.argv[1])
+import jax, jax.numpy as jnp, numpy as np
+from repro.fwi.solver import FWIConfig, ShotState, run_forward
+from repro.fwi.domain import stripe_mesh, make_sharded_multistep
+
+cfg = FWIConfig(nz=64, nx=128, timesteps=40, n_shots=2, sponge_width=8)
+ref, ref_tr = run_forward(cfg, steps=40)
+for k in (2, 4):
+    for n in (2, 4):
+        mesh = stripe_mesh(n)
+        blk, place = make_sharded_multistep(cfg, mesh, k=k)
+        s = ShotState.init(cfg)
+        p, pp = place((s.p, s.p_prev))
+        trs = []
+        for b in range(40 // k):
+            p, pp, tr = blk(p, pp, b * k)
+            trs.append(tr)
+        tr = jnp.concatenate(trs, axis=1)
+        err = float(jnp.max(jnp.abs(np.asarray(p) - np.asarray(ref.p))))
+        terr = float(jnp.max(jnp.abs(np.asarray(tr) - np.asarray(ref_tr))))
+        assert err < 1e-4 and terr < 1e-4, (k, n, err, terr)
+print("BLOCKED_MULTI_STRIPE_OK")
+"""
+
+
+def test_temporal_block_multi_stripe_subprocess():
+    """Temporal blocking across REAL stripe boundaries (4 host devices):
+    k-step blocks with one packed exchange match the reference for
+    several (k, stripe-count) combinations."""
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _MULTI_STRIPE_BLOCKED, src],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "BLOCKED_MULTI_STRIPE_OK" in out.stdout
+
+
+def test_ppermute_count_drops_k_fold():
+    """k=4 temporal blocking must emit the SAME 2 collective-permutes
+    per block as k=1 — i.e. 4× fewer per timestep."""
+    mesh = stripe_mesh(1)
+    s = ShotState.init(CFG)
+    counts = {}
+    for k in (1, 4):
+        blk, place = make_sharded_multistep(CFG, mesh, k=k)
+        p, pp = place((s.p, s.p_prev))
+        txt = jax.jit(blk).lower(p, pp, 0).as_text()
+        counts[k] = txt.count("collective_permute") \
+            + txt.count("collective-permute")
+    assert counts[1] == 2, counts
+    assert counts[4] == 2, counts          # per-timestep: 2 vs 0.5 = 4x
+
+
+def test_halo_exchange_plan_bookkeeping():
+    # seed formula preserved at k=1
+    assert halo_bytes_per_step(CFG, 4) == 2 * 2 * CFG.nz * CFG.n_shots * 4
+    plan1 = halo_exchange_plan(CFG, 4, k=1)
+    plan4 = halo_exchange_plan(CFG, 4, k=4)
+    assert plan1["ppermutes_per_step"] == 2.0
+    assert plan4["ppermutes_per_step"] == 0.5
+    assert plan4["steps_per_exchange"] == 4
+    # packed p+p_prev edges: amortized bytes exactly 2x the k=1 stream
+    assert plan4["bytes_per_step"] == 2 * plan1["bytes_per_step"]
+    # k clamps so the overlap fits in a stripe, and the clamped value is
+    # exposed on the block step so callers advance t0 correctly
+    assert effective_block(CFG, CFG.nx // 2, 64) == 1
+    blk, _ = make_sharded_multistep(CFG, stripe_mesh(1), k=4)
+    assert blk.k == 4
+
+
+# --------------------------------------------------------- kernel layer
+
+
+@pytest.mark.parametrize("bz", [8, 16, 32, 64, None])
+def test_pallas_bz_sweep_matches_ref(bz):
+    """Single-input BlockSpec kernel vs ref across strip heights,
+    including the auto-picked one (bz=None)."""
+    from repro.kernels.stencil.ops import wave_step
+
+    nz, nx = 64, 256
+    ks = jax.random.split(jax.random.key(7), 4)
+    p = jax.random.normal(ks[0], (nz, nx), jnp.float32)
+    pp = jax.random.normal(ks[1], (nz, nx), jnp.float32)
+    v = jax.random.uniform(ks[2], (nz, nx), jnp.float32, 0.05, 0.2)
+    sponge = jnp.clip(jax.random.uniform(ks[3], (nz, nx)), 0.9, 1.0)
+    a1, a2 = wave_step(p, pp, v, sponge)
+    b1, b2 = wave_step(p, pp, v, sponge, use_pallas=True, bz=bz)
+    np.testing.assert_allclose(a1, b1, atol=3e-6)
+    np.testing.assert_allclose(a2, b2, atol=3e-6)
+
+
+def test_sharded_pallas_path_equals_reference():
+    """use_pallas wired through the sharded local step: the fused kernel
+    runs inside the shard_map region and matches the reference."""
+    cfg = FWIConfig(nz=32, nx=64, timesteps=8, n_shots=1, sponge_width=4)
+    ref, ref_tr = run_forward(cfg, steps=8)
+    blk, place = make_sharded_multistep(
+        cfg, stripe_mesh(1), k=4, use_pallas=True
+    )
+    s = ShotState.init(cfg)
+    p, pp = place((s.p, s.p_prev))
+    trs = []
+    for b in range(2):
+        p, pp, tr = blk(p, pp, b * 4)
+        trs.append(tr)
+    tr = jnp.concatenate(trs, axis=1)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(ref.p), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(tr), np.asarray(ref_tr),
+                               atol=1e-5)
+
+
+def test_driver_checkpoint_carries_block_progress():
+    """A mid-block checkpoint/restore must not re-dispatch the pending
+    steps: physical timesteps stay in lockstep with logical steps."""
+    from repro.core.orchestrator import PodSpec, Resources
+    from repro.fwi.driver import FWISession, TimeModel
+
+    cfg = FWIConfig(nz=32, nx=64, timesteps=32, n_shots=1, sponge_width=4)
+    res = Resources(pods=[PodSpec(chips=1, name="cluster")], shares=[1.0])
+    rng = np.random.default_rng(0)
+    s = FWISession(cfg, res, 0, None, time_model=TimeModel(jitter=0.0),
+                   rng=rng, exchange_interval=4, scan_block=8)
+    for i in range(5):                      # mid-block: 3 steps pending
+        s.run_step(i)
+    snap = s.checkpoint(5)
+    assert snap["t"] == 8 and snap["pending"] == 3
+    s2 = FWISession(cfg, res, 5, snap, time_model=TimeModel(jitter=0.0),
+                    rng=rng, exchange_interval=4, scan_block=8)
+    for i in range(5, 16):
+        s2.run_step(i)
+    # 16 logical steps = exactly two blocks of 8 physical timesteps
+    assert s2.t == 16
+
+
+def test_interpret_auto_selects_off_tpu():
+    from repro.kernels.stencil.kernel import HALO, default_interpret, pick_bz
+
+    if jax.default_backend() != "tpu":
+        assert default_interpret() is True
+    assert 600 % pick_bz(600) == 0 and pick_bz(600) % 8 == 0
+    assert pick_bz(64) == 64
+    # strips shorter than the halo would silently mis-clamp the
+    # neighbor-row slices: prime heights fall back to one whole strip
+    assert pick_bz(251) == 251
+    assert pick_bz(127) >= HALO
+
+
+def test_pallas_prime_height_auto_bz():
+    """nz with no divisor in [HALO, cap] (prime 251) must still match
+    the reference through the auto-picked single-strip path."""
+    from repro.kernels.stencil.ops import wave_step
+
+    nz, nx = 251, 128
+    ks = jax.random.split(jax.random.key(11), 4)
+    p = jax.random.normal(ks[0], (nz, nx), jnp.float32)
+    pp = jax.random.normal(ks[1], (nz, nx), jnp.float32)
+    v = jax.random.uniform(ks[2], (nz, nx), jnp.float32, 0.05, 0.2)
+    sponge = jnp.clip(jax.random.uniform(ks[3], (nz, nx)), 0.9, 1.0)
+    a1, a2 = wave_step(p, pp, v, sponge)
+    b1, b2 = wave_step(p, pp, v, sponge, use_pallas=True)
+    np.testing.assert_allclose(a1, b1, atol=3e-6)
+    np.testing.assert_allclose(a2, b2, atol=3e-6)

@@ -11,6 +11,7 @@ from repro.launch.hlo_cost import (
     analyze,
     parse_module,
     parse_type,
+    xla_cost_analysis,
 )
 
 
@@ -35,7 +36,9 @@ def test_scan_trip_count_correction():
     assert r["flops"] == pytest.approx(8 * 2 * 4 * 256 * 256)
     assert 8 in r["while_trips"]
     # raw XLA counts one iteration
-    assert c.cost_analysis()["flops"] == pytest.approx(2 * 4 * 256 * 256, 1)
+    assert xla_cost_analysis(c)["flops"] == pytest.approx(
+        2 * 4 * 256 * 256, 1
+    )
 
 
 def test_nested_scan_trip_multiplication():
