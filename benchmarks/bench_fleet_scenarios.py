@@ -1,0 +1,62 @@
+"""Policy × scenario sweep of the hybrid-fleet simulator (DESIGN.md §11).
+
+Scores every autoscaler policy against every generated scenario on the
+three axes the auto-scaling literature (and the paper's cost/deadline
+trade-off) cares about:
+
+  deadline-hit-rate   fraction of foreground jobs finishing in time
+  cloud cost          $ for elastic chip-hours actually held
+  useful-work frac    useful chip·s / total chip·s consumed
+
+Acceptance of the paper's core claim at fleet scale: on the overload
+scenario the deadline-aware `plan` policy must beat the `no-burst`
+baseline on hit-rate while spending strictly less than `always-burst`.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.sim import POLICY_FACTORIES, FleetSim
+from repro.sim.scenarios import default_scenarios
+
+SEED = 0
+
+
+def sweep(seed: int = SEED) -> dict[tuple[str, str], object]:
+    out = {}
+    for sc in default_scenarios(seed):
+        for pname, pf in POLICY_FACTORIES.items():
+            out[(sc.name, pname)] = FleetSim(sc, pf, seed=seed).run()
+    return out
+
+
+def run() -> list[str]:
+    t0 = time.perf_counter()
+    recs = sweep()
+    dt_us = (time.perf_counter() - t0) * 1e6
+    n = len(recs)
+    rows = [f"fleet.policy_x_scenario_runs,{dt_us / n:.0f},{n}"]
+    for (sc, pol), r in sorted(recs.items()):
+        rows.append(
+            f"fleet.{sc}.{pol},{dt_us / n:.0f},"
+            f"hit={r.hit_rate:.2f};cost={r.cloud_cost:.2f};"
+            f"useful={r.useful_frac:.3f};makespan_s={r.makespan_s:.0f}"
+        )
+    # the §3.3 claim at fleet scale (also asserted by tests/CI)
+    plan = recs[("overload_ramp", "plan")]
+    nb = recs[("overload_ramp", "no-burst")]
+    ab = recs[("overload_ramp", "always-burst")]
+    rows.append(
+        f"fleet.overload_plan_beats_noburst,{dt_us / n:.0f},"
+        f"{int(plan.hit_rate > nb.hit_rate)}"
+    )
+    rows.append(
+        f"fleet.overload_plan_cheaper_than_always,{dt_us / n:.0f},"
+        f"{int(plan.cloud_cost < ab.cloud_cost)}"
+    )
+    spike = recs[("transient_spike", "plan")]
+    rows.append(
+        f"fleet.spike_cloud_retired_at_end,{dt_us / n:.0f},"
+        f"{int(spike.cloud_timeline[-1][1] == 0)}"
+    )
+    return rows

@@ -1,22 +1,57 @@
 """Paper §3.3 overhead measurements: halo message size (the 21 KB claim),
+measured ppermute seam latency feeding OverheadModel.with_measured_seam,
 monitor/planner per-step cost, checkpoint save/restore wall time."""
 from __future__ import annotations
 
 import tempfile
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.compat import shard_map
 from repro.core import (
     BurstPlanner,
     DeadlinePredictor,
     LogCapacityModel,
+    OverheadModel,
     StepTimeMonitor,
 )
-from repro.fwi.domain import halo_bytes_per_step, halo_exchange_plan
+from repro.fwi.domain import (
+    halo_bytes_per_step,
+    halo_exchange_plan,
+    stripe_mesh,
+)
 from repro.fwi.solver import FWIConfig
+
+
+def measured_ppermute_latency_s(payload_bytes: int, iters: int = 50) -> float:
+    """Median wall time of one jitted ``lax.ppermute`` dispatch over a
+    seam-sized payload on this host's single-device stripe mesh.
+
+    This is the dispatch-latency floor of a halo exchange — the number
+    ``OverheadModel.with_measured_seam`` consumes (provenance documented
+    there).  On real multi-pod hardware, rerun over the actual cross-DCI
+    link to get the RTT-dominated figure.
+    """
+    mesh = stripe_mesh(1)
+    n = max(payload_bytes // 4, 1)
+
+    f = jax.jit(shard_map(
+        lambda x: jax.lax.ppermute(x, "stripe", [(0, 0)]),
+        mesh=mesh, in_specs=P("stripe"), out_specs=P("stripe"),
+    ))
+    x = jnp.zeros((n,), jnp.float32)
+    f(x).block_until_ready()  # compile
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        f(x).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
 
 
 def run() -> list[str]:
@@ -35,6 +70,23 @@ def run() -> list[str]:
             f"msgs_per_step={plan['ppermutes_per_step']:.2f};"
             f"kb_per_exchange={plan['bytes_per_exchange'] / 1024:.1f};"
             f"kb_per_step={plan['bytes_per_step'] / 1024:.1f}"
+        )
+
+    # measured seam: ppermute dispatch latency over the k=1 payload,
+    # folded into the planner's OverheadModel (ROADMAP item; provenance
+    # in the OverheadModel docstring) — temporal blocking divides the
+    # recurring per-step seam tax by k
+    plan1 = halo_exchange_plan(cfg, 4, k=1)
+    t_pp = measured_ppermute_latency_s(int(plan1["bytes_per_exchange"]))
+    rows.append(
+        f"overheads.ppermute_latency_us,{t_pp * 1e6:.1f},{t_pp * 1e6:.1f}"
+    )
+    for k in (1, 4):
+        plan = halo_exchange_plan(cfg, 4, k=k)
+        om = OverheadModel().with_measured_seam(plan, t_pp)
+        rows.append(
+            f"overheads.measured_seam_s_per_step_k{k},{t_pp * 1e6:.1f},"
+            f"{om.seam_s_per_step():.6f}"
         )
 
     # monitor + planner per-step cost

@@ -10,6 +10,8 @@
   bench_roofline        — EXPERIMENTS §Roofline from dry-run artifacts
   bench_fused_scan      — scan-fused engine vs seed loop; temporal
                           blocking vs per-step halo exchange
+  bench_fleet_scenarios — autoscaler policy suite × fleet scenarios
+                          (hit-rate / cloud cost / useful-work frac)
 """
 from __future__ import annotations
 
@@ -24,6 +26,7 @@ from benchmarks import (  # noqa: E402
     bench_burst_deadline,
     bench_capacity_fit,
     bench_envs,
+    bench_fleet_scenarios,
     bench_fused_scan,
     bench_gamma_fit,
     bench_kernels,
@@ -36,6 +39,7 @@ BENCHES = [
     ("capacity_fit", bench_capacity_fit),
     ("gamma_fit", bench_gamma_fit),
     ("burst_deadline", bench_burst_deadline),
+    ("fleet_scenarios", bench_fleet_scenarios),
     ("overheads", bench_overheads),
     ("kernels", bench_kernels),
     ("fused_scan", bench_fused_scan),

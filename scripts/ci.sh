@@ -1,11 +1,17 @@
 #!/usr/bin/env bash
-# Tier-1 verification + benchmark smoke.
+# Tier-1 verification + benchmark smoke + docs consistency.
 #
 # 1. the repo's tier-1 test command (ROADMAP.md): full pytest, -x -q
 # 2. benchmark smoke: the fused-scan engine rows (steps/sec for
 #    loop-vs-scan, temporal blocking) and the §3.3 overhead rows must
 #    produce output without raising — this catches engine regressions
 #    that unit tests (which run tiny grids) would miss.
+# 3. fleet smoke: the autoscaler policy × scenario sweep must uphold
+#    the paper's claim at fleet scale — the deadline-aware policy beats
+#    no-burst on hit-rate in the overload scenario at lower cost than
+#    always-burst, and retires the cloud pod once a spike clears.
+# 4. docs consistency: every `DESIGN.md §N` cited under src/ or
+#    examples/ must resolve to a real section heading in DESIGN.md.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -31,5 +37,58 @@ speedup = next(
 )
 print(f"scan-fused speedup over seed loop: {speedup:.2f}x")
 assert speedup > 1.0, "scan-fused engine slower than per-step loop"
+EOF
+
+echo "== fleet smoke =="
+python - <<'EOF'
+import sys
+sys.path.insert(0, ".")
+from benchmarks import bench_fleet_scenarios
+
+rows = bench_fleet_scenarios.run()
+for r in rows:
+    print(r)
+
+def derived(name):
+    return next(
+        r.rsplit(",", 1)[1] for r in rows if r.startswith(name)
+    )
+
+assert derived("fleet.overload_plan_beats_noburst") == "1", \
+    "deadline-aware policy must beat no-burst on the overload scenario"
+assert derived("fleet.overload_plan_cheaper_than_always") == "1", \
+    "deadline-aware policy must undercut always-burst on cloud cost"
+assert derived("fleet.spike_cloud_retired_at_end") == "1", \
+    "cloud pod must be retired once the transient spike clears"
+EOF
+
+echo "== docs consistency =="
+python - <<'EOF'
+import pathlib
+import re
+import sys
+
+design = pathlib.Path("DESIGN.md").read_text()
+sections = set(re.findall(r"^#+\s+§([\w.-]+)", design, re.M))
+cite_re = re.compile(r"DESIGN\.md\s+((?:§[\w.-]+)(?:,\s*§[\w.-]+)*)")
+dangling = {}
+files = sorted(
+    list(pathlib.Path("src").rglob("*.py"))
+    + list(pathlib.Path("examples").rglob("*.py"))
+)
+n_cites = 0
+for p in files:
+    for m in cite_re.finditer(p.read_text()):
+        for tok in re.findall(r"§([\w.-]+)", m.group(1)):
+            n_cites += 1
+            if tok not in sections:
+                dangling.setdefault(tok, []).append(str(p))
+print(f"DESIGN.md sections: {sorted(sections, key=str)}")
+print(f"citations checked: {n_cites}")
+if dangling:
+    for tok, where in sorted(dangling.items()):
+        print(f"DANGLING: DESIGN.md §{tok} cited in {', '.join(where)}")
+    sys.exit(1)
+print("docs consistency OK")
 EOF
 echo "CI OK"

@@ -45,7 +45,7 @@ def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
     if shape.name == "long_500k" and not cfg.subquadratic:
         return False, (
             "skipped: pure full-attention arch has no sub-quadratic path "
-            "(DESIGN.md §Arch-applicability)"
+            "(DESIGN.md §7)"
         )
     return True, ""
 

@@ -7,28 +7,36 @@ from repro.core.allocator import (
     PodShare,
     conservation_ok,
     heterogeneous_split,
+    proportional_shares,
 )
 from repro.core.capacity import (
     LogCapacityModel,
     ThroughputModel,
     burst_cores,
     correction_factor,
+    legal_step_down,
+    legal_step_up,
     round_to_legal_slice,
 )
 from repro.core.deadline import DeadlineEstimate, DeadlinePredictor
 from repro.core.gamma import GammaModel, split_gamma
 from repro.core.monitor import StepTimeMonitor
 from repro.core.orchestrator import (
+    AutoscalerPolicy,
     BurstDecision,
     ElasticOrchestrator,
     PodFailure,
     PodSpec,
     Resources,
     RunRecord,
+    ScaleAction,
+    ScaleContext,
+    elastic_chips,
 )
 from repro.core.planner import BurstPlanner, OverheadModel
 
 __all__ = [
+    "AutoscalerPolicy",
     "BurstDecision",
     "BurstPlanner",
     "DeadlineEstimate",
@@ -43,12 +51,18 @@ __all__ = [
     "PodSpec",
     "Resources",
     "RunRecord",
+    "ScaleAction",
+    "ScaleContext",
     "StepTimeMonitor",
     "ThroughputModel",
     "burst_cores",
     "conservation_ok",
     "correction_factor",
+    "elastic_chips",
     "heterogeneous_split",
+    "legal_step_down",
+    "legal_step_up",
+    "proportional_shares",
     "round_to_legal_slice",
     "split_gamma",
 ]

@@ -20,6 +20,20 @@ from typing import Sequence
 import numpy as np
 
 
+def proportional_shares(throughputs: Sequence[float]) -> list[float]:
+    """Normalized work shares ∝ throughput — the γ split as fractions.
+
+    The paper's cloud pod contributes chips/K effective throughput; every
+    place that recomputes shares after a fleet GROW/SHRINK/RETIRE or a
+    rebalance goes through this one normalization (DESIGN.md §4).
+    """
+    total = sum(throughputs)
+    if total <= 0:
+        n = len(throughputs)
+        return [1.0 / n] * n if n else []
+    return [t / total for t in throughputs]
+
+
 @dataclasses.dataclass(frozen=True)
 class PodShare:
     pod: int

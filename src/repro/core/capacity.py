@@ -119,6 +119,24 @@ def round_to_legal_slice(c_n: float, legal: Sequence[int]) -> int:
     return max(legal)
 
 
+def legal_step_up(current: int, legal: Sequence[int]) -> int:
+    """Next legal slice strictly above `current` (max slice if at top).
+
+    Reactive autoscalers grow one provisioning quantum at a time; on TPU
+    the quantum is the next legal slice shape, not +1 chip.
+    """
+    for s in sorted(legal):
+        if s > current:
+            return s
+    return max(legal)
+
+
+def legal_step_down(current: int, legal: Sequence[int]) -> int:
+    """Largest legal slice strictly below `current`; 0 means retire."""
+    down = [s for s in sorted(legal) if s < current]
+    return down[-1] if down else 0
+
+
 @dataclasses.dataclass(frozen=True)
 class ThroughputModel:
     """Linear-throughput alternative for per-step workloads.

@@ -39,6 +39,21 @@ class DeadlineChange:
     new_deadline_s: float
 
 
+@dataclasses.dataclass(frozen=True)
+class BackgroundLoad:
+    """A background tenant occupying site chips over a wall-clock window.
+
+    The fleet simulator sums active BackgroundLoads into site demand, so
+    the paper's "cluster overloaded" condition emerges from contention
+    (demand / capacity) instead of a scripted SlowdownWindow.
+    """
+
+    start_s: float
+    end_s: float
+    chips: int
+    name: str = "tenant"
+
+
 @dataclasses.dataclass
 class SimEnvironment:
     """Synthetic step-time generator for one execution platform."""

@@ -11,6 +11,15 @@ device set and RESHARD = checkpoint restore under the new shardings).
 Fault tolerance beyond the paper: periodic checkpoints, failure events
 trigger a shrink-and-restart from the last checkpoint, sustained
 straggling triggers a γ rebalance using freshly measured throughputs.
+
+Beyond the paper's one-shot burst (its §4 names "scaling down" as future
+work), the loop can be driven by an external *autoscaler policy* that is
+consulted on the same fixed check interval and answers with a
+ScaleAction — GROW the elastic pod to a target slice, SHRINK it to a
+smaller one, RETIRE it entirely, or HOLD.  Every transition goes through
+the identical CHECKPOINT → REMESH → RESHARD → RESUME path as the paper's
+burst, so growing and shrinking are symmetric and checkpoint/restore
+invariants hold across both (DESIGN.md §8, §11).
 """
 from __future__ import annotations
 
@@ -18,10 +27,18 @@ import dataclasses
 import time
 from typing import Any, Callable, Protocol
 
-from repro.core.allocator import HeterogeneousPlan, heterogeneous_split
-from repro.core.deadline import DeadlinePredictor
+from repro.core.allocator import (
+    HeterogeneousPlan,
+    heterogeneous_split,
+    proportional_shares,
+)
+from repro.core.deadline import DeadlineEstimate, DeadlinePredictor
 from repro.core.monitor import StepTimeMonitor
 from repro.core.planner import BurstDecision, BurstPlanner
+
+#: pod-name prefixes that mark a pod as elastic (cloud-side, scalable);
+#: everything else is the fixed on-premise allocation.
+ELASTIC_PREFIXES = ("cloud", "burst")
 
 
 @dataclasses.dataclass
@@ -39,6 +56,57 @@ class Resources:
     @property
     def total_chips(self) -> int:
         return sum(p.chips for p in self.pods)
+
+
+def elastic_chips(res: "Resources") -> int:
+    """Chips currently held in elastic (cloud-side) pods."""
+    return sum(
+        p.chips for p in res.pods if p.name.startswith(ELASTIC_PREFIXES)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleAction:
+    """One autoscaler verdict for the elastic pod.
+
+    kind: "hold" | "grow" | "shrink" | "retire".  ``chips`` is the
+    *target* elastic-pod size for grow/shrink (already legal-slice
+    rounded by the policy); ``slowdown`` is the paper's K for chips
+    provisioned by a grow.
+    """
+
+    kind: str
+    chips: int = 0
+    slowdown: float = 1.0
+    reason: str = ""
+
+
+HOLD = ScaleAction("hold")
+
+
+@dataclasses.dataclass
+class ScaleContext:
+    """Everything a policy may look at when deciding (paper Fig. 1 inputs
+    plus the fleet-level signals the paper's operator would eyeball)."""
+
+    step: int
+    steps_total: int
+    elapsed_s: float
+    est: DeadlineEstimate
+    resources: "Resources"
+    cloud_chips: int
+    planner: BurstPlanner
+    monitor: StepTimeMonitor
+    legal: list[int]
+    contention: float = 1.0          # site demand / capacity (>= 1)
+
+
+class AutoscalerPolicy(Protocol):
+    """Interval-evaluated scaling policy (implementations: repro.sim)."""
+
+    name: str
+
+    def decide(self, ctx: ScaleContext) -> ScaleAction: ...
 
 
 class Session(Protocol):
@@ -106,17 +174,45 @@ class ElasticOrchestrator:
                 name=f"burst{len(res.pods)}",
             )
         ]
-        tps = [p.chips / p.slowdown for p in pods]
-        total = sum(tps)
-        return Resources(pods=pods, shares=[t / total for t in tps])
+        shares = proportional_shares([p.chips / p.slowdown for p in pods])
+        return Resources(pods=pods, shares=shares)
+
+    @staticmethod
+    def apply_scale(res: Resources, action: ScaleAction) -> Resources:
+        """Resize the elastic pod to the action's target (γ re-split).
+
+        grow/shrink converge on the same code path: set the single
+        elastic pod to ``action.chips`` (creating it on first grow,
+        keeping its measured K on resize) and recompute shares ∝
+        chips/K.  retire (or a target of 0) drops every elastic pod and
+        returns all work to the on-premise allocation.
+        """
+        if action.kind not in ("grow", "shrink", "retire"):
+            return res
+        fixed = [
+            p for p in res.pods if not p.name.startswith(ELASTIC_PREFIXES)
+        ]
+        elastic = [
+            p for p in res.pods if p.name.startswith(ELASTIC_PREFIXES)
+        ]
+        target = 0 if action.kind == "retire" else max(int(action.chips), 0)
+        pods = list(fixed)
+        if target > 0:
+            slowdown = (
+                elastic[0].slowdown if elastic
+                else max(action.slowdown, 1e-6)
+            )
+            pods.append(PodSpec(chips=target, slowdown=slowdown,
+                                name="cloud"))
+        shares = proportional_shares([p.chips / p.slowdown for p in pods])
+        return Resources(pods=pods, shares=shares)
 
     @staticmethod
     def rebalanced(res: Resources, measured_tps: list[float]) -> Resources:
-        total = sum(measured_tps)
-        if total <= 0:
+        if sum(measured_tps) <= 0:
             return res
         return Resources(
-            pods=list(res.pods), shares=[t / total for t in measured_tps]
+            pods=list(res.pods), shares=proportional_shares(measured_tps)
         )
 
     def split_plan(self, res: Resources, global_batch: int,
@@ -137,6 +233,7 @@ class ElasticOrchestrator:
         initial: Resources,
         steps_total: int,
         overhead_s_fn: Callable[[BurstDecision], float] | None = None,
+        autoscaler: AutoscalerPolicy | None = None,
     ) -> RunRecord:
         res = initial
         session = session_factory(res, 0, None)
@@ -157,9 +254,11 @@ class ElasticOrchestrator:
                     step, "failure", {"pod": f.pod}
                 ))
                 pods = [p for i, p in enumerate(res.pods) if i != f.pod]
-                tps = [p.chips / p.slowdown for p in pods]
                 res = Resources(
-                    pods=pods, shares=[t / sum(tps) for t in tps]
+                    pods=pods,
+                    shares=proportional_shares(
+                        [p.chips / p.slowdown for p in pods]
+                    ),
                 )
                 restart = max(last_ckpt_step + 1, 0)
                 elapsed += self.planner.overheads.restart_s
@@ -184,6 +283,41 @@ class ElasticOrchestrator:
                 self.monitor, step, steps_total, elapsed
             )
             eff_chips = sum(p.chips / p.slowdown for p in res.pods)
+            if autoscaler is not None:
+                # policy-driven mode: the interval-evaluated autoscaler
+                # replaces the built-in burst-once decision, and every
+                # resize rides the same ckpt -> remesh -> reshard path
+                action = autoscaler.decide(ScaleContext(
+                    step=step, steps_total=steps_total, elapsed_s=elapsed,
+                    est=est, resources=res,
+                    cloud_chips=elastic_chips(res),
+                    planner=self.planner, monitor=self.monitor,
+                    legal=list(self.planner.legal),
+                ))
+                new_res = self.apply_scale(res, action)
+                if action.kind != "hold" and new_res.pods != res.pods:
+                    last_ckpt = session.checkpoint(step)
+                    last_ckpt_step = step
+                    ov = self.planner.overheads
+                    overhead = (
+                        ov.total() if action.kind == "grow"
+                        else ov.ckpt_s + ov.restart_s
+                    )
+                    elapsed += overhead
+                    res = new_res
+                    session = session_factory(res, step, last_ckpt)
+                    self.monitor.reset_window()
+                    events.append(OrchestratorEvent(
+                        step, "scale",
+                        {
+                            "kind": action.kind,
+                            "cloud_chips": elastic_chips(res),
+                            "overhead_s": overhead,
+                            "reason": action.reason,
+                            "shares": list(res.shares),
+                        },
+                    ))
+                continue
             decision = self.planner.plan(
                 est, step, steps_total,
                 observed_step_s=self.monitor.step_time(),

@@ -40,7 +40,18 @@ class OverheadModel:
     21 KB message is latency-, not bandwidth-, dominated).  With the
     temporally-blocked solver, ``seam_syncs_per_step`` is
     ``halo_exchange_plan(...)["ppermutes_per_step"] / 2`` — k-step
-    blocking cuts the recurring burst tax k×."""
+    blocking cuts the recurring burst tax k×.
+
+    Provenance of a *measured* seam (``with_measured_seam``): feed in the
+    solver's ``halo_exchange_plan(cfg, n_stripes, k)`` (message shape and
+    cadence) plus a per-ppermute latency measured by
+    ``benchmarks/bench_overheads.py`` (jitted ``lax.ppermute`` dispatch
+    over a seam-sized payload on this host).  One seam sync is one
+    packed bidirectional exchange = 2 ppermutes, so
+    ``seam_latency_s = 2 · t_ppermute`` and ``seam_syncs_per_step =
+    ppermutes_per_step / 2 = 1/k``.  On real hardware substitute the
+    cross-DCI ppermute timing; the CPU number is a dispatch-latency
+    floor, not a network RTT."""
 
     ckpt_s: float = 10.0
     provision_s: float = 90.0           # slice spin-up
@@ -56,6 +67,20 @@ class OverheadModel:
 
     def seam_s_per_step(self) -> float:
         return self.seam_latency_s * self.seam_syncs_per_step
+
+    def with_measured_seam(
+        self, plan: dict, ppermute_latency_s: float
+    ) -> "OverheadModel":
+        """Replace the default-zero seam with a measured one (ROADMAP
+        item; provenance in the class docstring).  ``plan`` is
+        ``fwi.domain.halo_exchange_plan(...)``."""
+        return dataclasses.replace(
+            self,
+            seam_latency_s=(
+                plan["ppermutes_per_exchange"] * ppermute_latency_s
+            ),
+            seam_syncs_per_step=plan["ppermutes_per_step"] / 2.0,
+        )
 
 
 @dataclasses.dataclass(frozen=True)

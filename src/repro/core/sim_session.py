@@ -8,6 +8,7 @@ exercises, with wall-clock replaced by the simulated platform model
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 import numpy as np
 
@@ -36,6 +37,7 @@ class SimSession:
         windows: dict[int, list[SlowdownWindow]] | None = None,
         failures: dict[int, int] | None = None,  # step -> pod
         sync_overhead_s: float = 0.0,
+        extra_slowdown: Callable[[int, int], float] | None = None,
     ):
         self.w = workload
         self.res = res
@@ -43,7 +45,13 @@ class SimSession:
         self.windows = windows or {}
         self.failures = failures or {}
         self.sync_overhead_s = sync_overhead_s
-        self.state = restored or {"step": start_step}
+        # (pod_index, step) -> multiplicative slowdown, queried per step.
+        # The fleet simulator hooks site contention in here so overload
+        # *emerges* from background-tenant demand instead of being
+        # scripted via SlowdownWindow (DESIGN.md §11).
+        self.extra_slowdown = extra_slowdown
+        # copy: the caller's checkpoint must stay immutable after restore
+        self.state = dict(restored) if restored else {"step": start_step}
 
     def run_step(self, step: int) -> float:
         if step in self.failures:
@@ -61,6 +69,8 @@ class SimSession:
             for wdw in self.windows.get(i, []):
                 if wdw.start_step <= step < wdw.end_step:
                     t *= wdw.factor
+            if self.extra_slowdown is not None:
+                t *= self.extra_slowdown(i, step)
             times.append(t)
         dt = max(times) if times else 0.0
         dt *= 1.0 + self.w.jitter * abs(float(self.rng.standard_normal()))
@@ -74,7 +84,8 @@ class SimSession:
 
 
 def sim_session_factory(workload: SimWorkload, *, rng=None, windows=None,
-                        failures=None, sync_overhead_s=0.0):
+                        failures=None, sync_overhead_s=0.0,
+                        extra_slowdown=None):
     rng = rng or np.random.default_rng(0)
     failures = dict(failures or {})
 
@@ -83,6 +94,7 @@ def sim_session_factory(workload: SimWorkload, *, rng=None, windows=None,
             workload, res, start_step, restored,
             rng=rng, windows=windows, failures=failures,
             sync_overhead_s=sync_overhead_s,
+            extra_slowdown=extra_slowdown,
         )
 
     return factory

@@ -1,0 +1,37 @@
+# Hybrid-fleet layer: the paper's single-job burst decision driven at
+# fleet scale — site contention, cloud provisioning/cost/spot dynamics,
+# and an interval-evaluated autoscaler policy suite (DESIGN.md §11).
+from repro.sim.autoscalers import (
+    POLICY_FACTORIES,
+    AlwaysBurstAutoscaler,
+    HistAutoscaler,
+    NoBurstAutoscaler,
+    PlanAutoscaler,
+    ReactAutoscaler,
+)
+from repro.sim.fleet import (
+    CloudProvider,
+    FleetRecord,
+    FleetSim,
+    JobRecord,
+    JobSpec,
+    Site,
+)
+from repro.sim.scenarios import Scenario, default_scenarios
+
+__all__ = [
+    "AlwaysBurstAutoscaler",
+    "CloudProvider",
+    "FleetRecord",
+    "FleetSim",
+    "HistAutoscaler",
+    "JobRecord",
+    "JobSpec",
+    "NoBurstAutoscaler",
+    "POLICY_FACTORIES",
+    "PlanAutoscaler",
+    "ReactAutoscaler",
+    "Scenario",
+    "Site",
+    "default_scenarios",
+]

@@ -1,0 +1,263 @@
+"""Auto-scaler policy suite — the paper's Fig. 1 decision loop as one
+policy among several, evaluated on a fixed interval (DESIGN.md §11).
+
+The paper's contribution is a *deadline-aware, model-driven* scaler
+(capacity models eqs. 1-3 + γ split).  To show what that buys, the fleet
+simulator runs it against the classic policy families the auto-scaling
+literature benchmarks (React/Hist in the style of the OpenDC prototype
+suite) and two brackets:
+
+  no-burst      lower bracket: the static on-premise allocation
+  always-burst  upper bracket: provision the maximum slice on arrival
+  react         reactive: one legal slice up on a predicted miss, one
+                down when slack is comfortable (no model, no sizing)
+  hist          predictive: percentile-of-history step time projects
+                completion; grows/retires on the projection
+  plan          deadline-aware: BurstPlanner sizes the slice via the
+                capacity models and K; retires as soon as the on-premise
+                side alone meets the deadline
+
+Every policy answers with a ScaleAction; the orchestrator/fleet applies
+it through the identical CHECKPOINT → REMESH → RESHARD → RESUME path, so
+policies differ only in *when* and *how much* — never in mechanism.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+from repro.core.capacity import (
+    legal_step_down,
+    legal_step_up,
+    round_to_legal_slice,
+)
+from repro.core.orchestrator import (
+    ELASTIC_PREFIXES,
+    HOLD,
+    AutoscalerPolicy,
+    ScaleAction,
+    ScaleContext,
+)
+
+__all__ = [
+    "AutoscalerPolicy",
+    "AlwaysBurstAutoscaler",
+    "HistAutoscaler",
+    "NoBurstAutoscaler",
+    "PlanAutoscaler",
+    "ReactAutoscaler",
+    "POLICY_FACTORIES",
+]
+
+
+class NoBurstAutoscaler:
+    """Baseline: never touch the cloud (the paper's 'static' run)."""
+
+    name = "no-burst"
+
+    def decide(self, ctx: ScaleContext) -> ScaleAction:
+        return HOLD
+
+
+class AlwaysBurstAutoscaler:
+    """Upper bracket: hold the largest legal slice for the whole run.
+
+    Maximizes the chance of hitting the deadline and the bill alike —
+    the cost anchor the paper's adaptive approach is judged against.
+    """
+
+    name = "always-burst"
+
+    def __init__(self, chips: int | None = None, slowdown: float = 1.4):
+        self.chips = chips
+        self.slowdown = slowdown
+
+    def decide(self, ctx: ScaleContext) -> ScaleAction:
+        target = self.chips or max(ctx.legal)
+        if ctx.cloud_chips < target:
+            return ScaleAction("grow", chips=target,
+                               slowdown=self.slowdown,
+                               reason="always-burst holds max slice")
+        return HOLD
+
+
+class ReactAutoscaler:
+    """Reactive scaler: step the slice up/down on the current signal.
+
+    No capacity model: if the deadline estimate says miss, grow by one
+    legal slice; if slack exceeds ``shrink_slack_frac`` of the deadline,
+    step down (0 chips ⇒ retire).  The provisioning quantum is the next
+    legal slice shape (capacity.legal_step_up/down).
+    """
+
+    name = "react"
+
+    def __init__(self, slowdown: float = 1.4,
+                 shrink_slack_frac: float = 0.25):
+        self.slowdown = slowdown
+        self.shrink_slack_frac = shrink_slack_frac
+
+    def decide(self, ctx: ScaleContext) -> ScaleAction:
+        est = ctx.est
+        if not est.predictable:
+            return HOLD
+        if est.will_miss:
+            up = legal_step_up(ctx.cloud_chips, ctx.legal)
+            if up > ctx.cloud_chips:
+                return ScaleAction("grow", chips=up,
+                                   slowdown=self.slowdown,
+                                   reason="reactive step up on miss")
+            return HOLD
+        if (
+            ctx.cloud_chips > 0
+            and est.slack_s > self.shrink_slack_frac * est.deadline_s
+        ):
+            down = legal_step_down(ctx.cloud_chips, ctx.legal)
+            if down == 0:
+                return ScaleAction("retire",
+                                   reason="reactive retire on slack")
+            return ScaleAction("shrink", chips=down,
+                               reason="reactive step down on slack")
+        return HOLD
+
+
+class HistAutoscaler:
+    """Predictive scaler: percentile-of-history step time.
+
+    Keeps a window of observed per-step times; projects completion with
+    a conservative percentile (growth) and an optimistic one (retire),
+    so transient spikes don't whipsaw the slice.  Sizing uses the
+    work-conservation identity t ∝ 1/chips on the *percentile* step
+    time — a model-free cousin of the paper's capacity inversion.
+    """
+
+    name = "hist"
+
+    def __init__(self, window: int = 64, grow_pct: float = 0.9,
+                 shrink_pct: float = 0.5, slowdown: float = 1.4,
+                 margin_frac: float = 0.1):
+        self.window = window
+        self.grow_pct = grow_pct
+        self.shrink_pct = shrink_pct
+        self.slowdown = slowdown
+        self.margin_frac = margin_frac
+        self._hist: deque[float] = deque(maxlen=window)
+
+    @staticmethod
+    def _pct(xs: list[float], q: float) -> float:
+        s = sorted(xs)
+        return s[min(int(q * len(s)), len(s) - 1)]
+
+    def decide(self, ctx: ScaleContext) -> ScaleAction:
+        t_now = ctx.monitor.step_time()
+        if t_now > 0:
+            self._hist.append(t_now)
+        if len(self._hist) < 4 or not ctx.est.predictable:
+            return HOLD
+        steps_rem = max(ctx.steps_total - ctx.step, 0)
+        if steps_rem == 0:
+            return HOLD
+        budget = ctx.est.deadline_s * (1 - self.margin_frac) \
+            - ctx.elapsed_s
+        t_grow = self._pct(list(self._hist), self.grow_pct)
+        if steps_rem * t_grow > budget > 0:
+            # invert t ∝ 1/chips at the pessimistic percentile: how many
+            # effective chips would bring the projection inside budget?
+            eff_now = sum(
+                p.chips / p.slowdown for p in ctx.resources.pods
+            )
+            eff_needed = eff_now * steps_rem * t_grow / budget
+            extra = (eff_needed - eff_now) * self.slowdown
+            target = round_to_legal_slice(
+                ctx.cloud_chips + extra, ctx.legal
+            )
+            if target > ctx.cloud_chips:
+                return ScaleAction(
+                    "grow", chips=target, slowdown=self.slowdown,
+                    reason=f"p{int(self.grow_pct * 100)} projects miss",
+                )
+            return HOLD
+        if ctx.cloud_chips > 0 and budget > 0:
+            # would the optimistic projection hold *without* the cloud?
+            t_opt = self._pct(list(self._hist), self.shrink_pct)
+            eff_now = sum(
+                p.chips / p.slowdown for p in ctx.resources.pods
+            )
+            eff_onprem = eff_now - ctx.cloud_chips / self.slowdown
+            if eff_onprem > 0:
+                t_onprem = t_opt * eff_now / eff_onprem
+                if steps_rem * t_onprem < budget:
+                    return ScaleAction(
+                        "retire",
+                        reason=f"p{int(self.shrink_pct * 100)} projects "
+                               "hit without cloud",
+                    )
+        return HOLD
+
+
+class PlanAutoscaler:
+    """Deadline-aware scaler — the paper's pipeline, made reversible.
+
+    GROW: BurstPlanner.plan() runs the full Fig. 1 chain (deadline
+    estimate → calibrated capacity model → eq. 3 chips → K correction →
+    legal slice), so the slice is *sized*, not stepped.  RETIRE: as soon
+    as the projected on-premise-only completion (observed step time
+    rescaled by the effective-chip ratio) fits the deadline with margin,
+    the cloud pod is dropped — the scale-*down* the paper leaves as
+    future work (§4).
+    """
+
+    name = "plan"
+
+    def __init__(self, retire_margin_frac: float = 0.15):
+        self.retire_margin_frac = retire_margin_frac
+
+    def decide(self, ctx: ScaleContext) -> ScaleAction:
+        est = ctx.est
+        if not est.predictable:
+            return HOLD
+        eff_now = sum(p.chips / p.slowdown for p in ctx.resources.pods)
+        decision = ctx.planner.plan(
+            est, ctx.step, ctx.steps_total,
+            observed_step_s=ctx.monitor.step_time(),
+            effective_chips=eff_now,
+        )
+        if decision.burst and decision.chips_burst > ctx.cloud_chips:
+            return ScaleAction(
+                "grow", chips=decision.chips_burst,
+                slowdown=max(decision.correction_K, 1e-6),
+                reason=decision.reason,
+            )
+        if ctx.cloud_chips > 0:
+            cloud_pods = [
+                p for p in ctx.resources.pods
+                if p.name.startswith(ELASTIC_PREFIXES)
+            ]
+            eff_cloud = sum(p.chips / p.slowdown for p in cloud_pods)
+            eff_onprem = eff_now - eff_cloud
+            steps_rem = max(ctx.steps_total - ctx.step, 0)
+            t_now = ctx.monitor.step_time()
+            if eff_onprem > 0 and t_now > 0:
+                t_onprem = t_now * eff_now / eff_onprem
+                ov = ctx.planner.overheads
+                projected = (
+                    ctx.elapsed_s + ov.ckpt_s + ov.restart_s
+                    + steps_rem * t_onprem
+                )
+                if projected < (1 - self.retire_margin_frac) \
+                        * est.deadline_s:
+                    return ScaleAction(
+                        "retire",
+                        reason="on-premise alone meets deadline "
+                               f"({projected:.0f}s < {est.deadline_s:.0f}s)",
+                    )
+        return HOLD
+
+
+#: fresh-instance factories (Hist is stateful, one instance per job)
+POLICY_FACTORIES = {
+    "no-burst": NoBurstAutoscaler,
+    "always-burst": AlwaysBurstAutoscaler,
+    "react": ReactAutoscaler,
+    "hist": HistAutoscaler,
+    "plan": PlanAutoscaler,
+}

@@ -1,0 +1,536 @@
+"""Discrete-event hybrid-fleet simulator (DESIGN.md §11).
+
+The paper evaluates one job bursting once from one loaded cluster.  This
+module drives the *same single-job decision code* — StepTimeMonitor,
+DeadlinePredictor, BurstPlanner, SimSession, the orchestrator's
+apply_scale γ re-split — at fleet scale:
+
+  Site           on-premise capacity; foreground jobs plus background
+                 tenant arrivals create demand, and the "cluster
+                 overloaded" condition is *emergent* contention
+                 (demand / capacity), not a scripted SlowdownWindow
+  CloudProvider  elastic capacity with provisioning delay, per-chip-hour
+                 price, legal slice shapes, optional spot reclaims
+  FleetSim       event loop (heapq, virtual clock): job arrivals, step
+                 completions, fixed-interval autoscaler evaluation,
+                 provision-complete attachment, spot reclaims, node
+                 failures, mid-run deadline changes
+
+Per job, the policy's ScaleAction takes effect at the next step boundary
+through CHECKPOINT → REMESH → RESHARD → RESUME, exactly like the
+orchestrator's burst path: grow pays the full overhead chain (minus
+provisioning, which overlaps with execution in the fleet), shrink/retire
+pay checkpoint + restart.  Reclaims and failures roll the job back to
+its last checkpoint.  All randomness flows from per-job seeded
+Generators, so runs are bit-deterministic for a given (scenario, policy,
+seed) triple.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable
+
+import numpy as np
+
+from repro.core import (
+    BurstPlanner,
+    DeadlinePredictor,
+    ElasticOrchestrator,
+    LogCapacityModel,
+    PodSpec,
+    Resources,
+    ScaleAction,
+    ScaleContext,
+    StepTimeMonitor,
+    elastic_chips,
+    proportional_shares,
+)
+from repro.core.events import BackgroundLoad
+from repro.core.orchestrator import AutoscalerPolicy
+from repro.core.sim_session import SimSession, SimWorkload
+
+__all__ = [
+    "CloudProvider",
+    "FleetRecord",
+    "FleetSim",
+    "JobRecord",
+    "JobSpec",
+    "Site",
+]
+
+_MAX_EVENTS = 2_000_000
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """One foreground scientific job (the paper's FWI analogue)."""
+
+    name: str
+    arrival_s: float
+    steps_total: int
+    deadline_s: float                 # relative to arrival
+    chip_seconds_per_step: float      # work per step (chip·s)
+    onprem_chips: int
+    jitter: float = 0.01
+
+
+class Site:
+    """On-premise cluster: finite chips shared by foreground jobs and
+    background tenants.  Oversubscription slows every on-premise pod by
+    demand/capacity — the organic version of the paper's congestion."""
+
+    def __init__(self, chips: int, name: str = "site"):
+        self.chips = chips
+        self.name = name
+        self._fg_chips: dict[str, int] = {}
+        self.background: tuple[BackgroundLoad, ...] = ()
+
+    def attach(self, job: str, chips: int) -> None:
+        self._fg_chips[job] = chips
+
+    def release(self, job: str) -> None:
+        self._fg_chips.pop(job, None)
+
+    def demand(self, t: float) -> int:
+        bg = sum(
+            b.chips for b in self.background if b.start_s <= t < b.end_s
+        )
+        return sum(self._fg_chips.values()) + bg
+
+    def contention(self, t: float) -> float:
+        return max(1.0, self.demand(t) / self.chips)
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudProvider:
+    """Elastic environment: what the paper calls "the cloud"."""
+
+    legal_slices: tuple[int, ...] = (16, 32, 64, 128, 256)
+    provision_delay_s: float = 90.0
+    price_per_chip_hour: float = 3.0
+    slowdown: float = 1.4             # paper's K per cloud chip
+    spot: bool = False
+    spot_mean_life_s: float = 1800.0
+
+    def cost(self, chip_seconds: float) -> float:
+        return chip_seconds / 3600.0 * self.price_per_chip_hour
+
+
+@dataclasses.dataclass
+class JobRecord:
+    name: str
+    finished: bool
+    finish_s: float
+    elapsed_s: float
+    deadline_s: float
+    met_deadline: bool
+    steps_total: int
+    cloud_chip_s: float
+    cloud_cost: float
+    overhead_s: float
+    rollbacks: int
+    events: list[tuple[float, str, dict]]
+
+
+@dataclasses.dataclass
+class FleetRecord:
+    scenario: str
+    policy: str
+    jobs: list[JobRecord]
+    hit_rate: float
+    cloud_cost: float
+    useful_frac: float
+    cloud_timeline: list[tuple[float, int]]   # (t, fleet cloud chips)
+    makespan_s: float
+
+
+class _JobRt:
+    """Mutable per-job runtime the event handlers share."""
+
+    def __init__(self, spec: JobSpec, policy: AutoscalerPolicy):
+        self.spec = spec
+        self.policy = policy
+        self.res: Resources | None = None
+        self.session: SimSession | None = None
+        self.monitor = StepTimeMonitor()
+        self.predictor = DeadlinePredictor(spec.deadline_s)
+        self.planner: BurstPlanner | None = None
+        self.rng: np.random.Generator | None = None
+        self.spot_rng: np.random.Generator | None = None
+        self.steps_done = 0
+        self.last_ckpt = None
+        self.last_ckpt_step = 0
+        self.arrived = False
+        self.finished = False
+        self.finish_s = 0.0
+        self.step_epoch = 0           # invalidates in-flight step events
+        self.cloud_epoch = 0          # invalidates stale spot reclaims
+        self.pending_action: ScaleAction | None = None
+        self.pending_target = 0       # chips requested, not yet online
+        self.cloud_since = 0.0
+        self.cloud_chip_s = 0.0
+        self.overhead_s = 0.0
+        self.rollbacks = 0
+        self.events: list[tuple[float, str, dict]] = []
+
+    @property
+    def cloud_chips(self) -> int:
+        return elastic_chips(self.res) if self.res else 0
+
+
+class FleetSim:
+    """Event-driven multi-job run of one scenario under one policy."""
+
+    def __init__(
+        self,
+        scenario,                      # scenarios.Scenario
+        policy_factory: Callable[[], AutoscalerPolicy],
+        *,
+        seed: int = 0,
+    ):
+        self.sc = scenario
+        self.site = Site(scenario.site_chips)
+        self.site.background = tuple(scenario.background)
+        self.cloud: CloudProvider = scenario.cloud
+        self.seed = seed
+        self.now = 0.0
+        self._seq = 0
+        self._heap: list[tuple[float, int, str, tuple]] = []
+        self.jobs = [
+            _JobRt(spec, policy_factory()) for spec in scenario.jobs
+        ]
+        self.cloud_timeline: list[tuple[float, int]] = [(0.0, 0)]
+
+    # ---- event plumbing ---------------------------------------------------
+
+    def _push(self, t: float, kind: str, payload: tuple = ()) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, kind, payload))
+
+    # ---- job lifecycle ----------------------------------------------------
+
+    def _make_session(self, jrt: _JobRt, start_step: int,
+                      restored) -> SimSession:
+        def contention_slowdown(i: int, step: int, jrt=jrt) -> float:
+            pod = jrt.res.pods[i]
+            if pod.name == self.site.name:
+                return self.site.contention(self.now)
+            return 1.0
+
+        return SimSession(
+            SimWorkload(jrt.spec.chip_seconds_per_step, jrt.spec.jitter),
+            jrt.res, start_step, restored,
+            rng=jrt.rng,
+            extra_slowdown=contention_slowdown,
+        )
+
+    def _arrive(self, jrt: _JobRt) -> None:
+        spec = jrt.spec
+        idx = self.jobs.index(jrt)
+        jrt.rng = np.random.default_rng([self.seed, idx])
+        jrt.spot_rng = np.random.default_rng([self.seed, idx, 1])
+        jrt.res = Resources(
+            pods=[PodSpec(spec.onprem_chips, name=self.site.name)],
+            shares=[1.0],
+        )
+        # per-job capacity models from the workload's own scaling law
+        # (t = W/c), cloud curve K× above — the paper's pre-processing
+        # fit, done analytically since the simulated law is known
+        cs = sorted(set(self.cloud.legal_slices)
+                    | {spec.onprem_chips})
+        w = spec.chip_seconds_per_step
+        jrt.planner = BurstPlanner(
+            cluster_model=LogCapacityModel.fit(
+                cs, [w / c for c in cs], name="site"),
+            cloud_model=LogCapacityModel.fit(
+                cs, [self.cloud.slowdown * w / c for c in cs],
+                name="cloud"),
+            chips_cluster=spec.onprem_chips,
+            legal_slices=self.cloud.legal_slices,
+            overheads=self.sc.overheads,
+        )
+        self.site.attach(spec.name, spec.onprem_chips)
+        jrt.session = self._make_session(jrt, 0, None)
+        jrt.arrived = True
+        jrt.events.append((self.now, "arrival", {}))
+        self._start_step(jrt)
+
+    def _start_step(self, jrt: _JobRt, extra_delay_s: float = 0.0) -> None:
+        dt = jrt.session.run_step(jrt.steps_done)
+        jrt.overhead_s += extra_delay_s
+        self._push(self.now + extra_delay_s + dt, "step_done",
+                   (jrt, jrt.step_epoch, dt))
+
+    def _bill_cloud(self, jrt: _JobRt) -> None:
+        chips = jrt.cloud_chips
+        if chips > 0:
+            jrt.cloud_chip_s += chips * (self.now - jrt.cloud_since)
+            jrt.cloud_since = self.now
+
+    def _record_timeline(self) -> None:
+        total = sum(j.cloud_chips for j in self.jobs if j.arrived
+                    and not j.finished)
+        self.cloud_timeline.append((self.now, total))
+
+    def _measured_tps(self, jrt: _JobRt) -> list[float]:
+        """Per-pod throughput as the monitor would measure it *now*:
+        nominal chips/K, derated by site contention for on-premise
+        pods.  Feeds the orchestrator's γ rebalance."""
+        c = self.site.contention(self.now)
+        return [
+            p.chips / p.slowdown
+            / (c if p.name == self.site.name else 1.0)
+            for p in jrt.res.pods
+        ]
+
+    def _rescale(self, jrt: _JobRt, action: ScaleAction,
+                 overhead_s: float) -> None:
+        """Apply a ScaleAction at a step boundary: checkpoint, re-split
+        γ, rebuild the session on the new Resources, pay the overhead.
+        Shares always land on *measured* throughputs (the paper's γ from
+        current conditions, not nominal chip counts)."""
+        ckpt = jrt.session.checkpoint(jrt.steps_done)
+        jrt.last_ckpt = ckpt
+        jrt.last_ckpt_step = jrt.steps_done
+        self._bill_cloud(jrt)
+        if action.kind != "rebalance":
+            jrt.res = ElasticOrchestrator.apply_scale(jrt.res, action)
+        jrt.res = ElasticOrchestrator.rebalanced(
+            jrt.res, self._measured_tps(jrt)
+        )
+        if jrt.cloud_chips > 0:
+            jrt.cloud_since = self.now
+        jrt.session = self._make_session(jrt, jrt.steps_done, ckpt)
+        jrt.monitor.reset_window()
+        jrt.events.append((self.now, "scale", {
+            "kind": action.kind, "cloud_chips": jrt.cloud_chips,
+            "overhead_s": overhead_s, "reason": action.reason,
+        }))
+        self._record_timeline()
+        if action.kind == "grow" and self.cloud.spot:
+            jrt.cloud_epoch += 1
+            life = float(
+                jrt.spot_rng.exponential(self.cloud.spot_mean_life_s)
+            )
+            self._push(self.now + life, "reclaim",
+                       (jrt, jrt.cloud_epoch))
+        self._start_step(jrt, extra_delay_s=overhead_s)
+
+    def _rollback(self, jrt: _JobRt, kind: str, drop_cloud: bool) -> None:
+        """Fall back to the last checkpoint (spot reclaim / node
+        failure): lost steps are re-run, restart overhead is paid."""
+        jrt.rollbacks += 1
+        jrt.step_epoch += 1
+        self._bill_cloud(jrt)
+        if drop_cloud:
+            jrt.cloud_epoch += 1
+            jrt.res = ElasticOrchestrator.apply_scale(
+                jrt.res, ScaleAction("retire", reason=kind)
+            )
+        jrt.pending_action = None
+        jrt.pending_target = 0
+        jrt.steps_done = jrt.last_ckpt_step
+        jrt.session = self._make_session(
+            jrt, jrt.last_ckpt_step, jrt.last_ckpt
+        )
+        jrt.monitor.reset_window()
+        restart = self.sc.overheads.restart_s
+        jrt.events.append((self.now, kind, {
+            "resume_step": jrt.steps_done, "cloud_chips": jrt.cloud_chips,
+        }))
+        self._record_timeline()
+        self._start_step(jrt, extra_delay_s=restart)
+
+    def _finish(self, jrt: _JobRt) -> None:
+        jrt.finished = True
+        jrt.finish_s = self.now
+        self._bill_cloud(jrt)
+        if jrt.cloud_chips > 0:
+            jrt.res = ElasticOrchestrator.apply_scale(
+                jrt.res, ScaleAction("retire", reason="job finished")
+            )
+        self.site.release(jrt.spec.name)
+        jrt.events.append((self.now, "finish", {
+            "elapsed_s": self.now - jrt.spec.arrival_s,
+        }))
+        self._record_timeline()
+
+    # ---- event handlers ---------------------------------------------------
+
+    def _on_step_done(self, jrt: _JobRt, epoch: int, dt: float) -> None:
+        if jrt.finished or epoch != jrt.step_epoch:
+            return
+        jrt.monitor.observe(dt)
+        jrt.steps_done += 1
+        if jrt.steps_done % self.sc.ckpt_every == 0:
+            jrt.last_ckpt = jrt.session.checkpoint(jrt.steps_done)
+            jrt.last_ckpt_step = jrt.steps_done
+        if jrt.steps_done >= jrt.spec.steps_total:
+            self._finish(jrt)
+            return
+        if jrt.pending_action is not None:
+            action, jrt.pending_action = jrt.pending_action, None
+            ov = self.sc.overheads
+            # provisioning overlapped with execution; attach pays the
+            # checkpoint + restart legs only (grow or shrink alike)
+            self._rescale(jrt, action, ov.ckpt_s + ov.restart_s)
+            return
+        self._start_step(jrt)
+
+    def _on_evaluate(self) -> None:
+        for jrt in self.jobs:
+            if not jrt.arrived or jrt.finished:
+                continue
+            elapsed = self.now - jrt.spec.arrival_s
+            est = jrt.predictor.estimate(
+                jrt.monitor, jrt.steps_done, jrt.spec.steps_total,
+                elapsed,
+            )
+            ctx = ScaleContext(
+                step=jrt.steps_done, steps_total=jrt.spec.steps_total,
+                elapsed_s=elapsed, est=est, resources=jrt.res,
+                cloud_chips=jrt.cloud_chips, planner=jrt.planner,
+                monitor=jrt.monitor,
+                legal=list(self.cloud.legal_slices),
+                contention=self.site.contention(self.now),
+            )
+            action = jrt.policy.decide(ctx)
+            if action.kind == "grow":
+                target = max(action.chips, 0)
+                if target > max(jrt.cloud_chips, jrt.pending_target):
+                    jrt.pending_target = target
+                    self._push(
+                        self.now + self.cloud.provision_delay_s,
+                        "provision", (jrt, target, action.reason),
+                    )
+                    jrt.events.append((self.now, "provision_request", {
+                        "chips": target, "reason": action.reason,
+                    }))
+            elif action.kind in ("shrink", "retire") \
+                    and jrt.cloud_chips > 0:
+                jrt.pending_action = action
+                jrt.pending_target = 0
+            if (
+                jrt.pending_action is None
+                and len(jrt.res.pods) > 1
+                and jrt.pending_target == 0
+            ):
+                # γ drift: conditions moved since the last split (e.g. a
+                # spike cleared) — re-split on measured throughput, the
+                # fleet analogue of the orchestrator's rebalance path
+                want = proportional_shares(self._measured_tps(jrt))
+                drift = max(
+                    abs(a - b) for a, b in zip(want, jrt.res.shares)
+                )
+                if drift > 0.1:
+                    jrt.pending_action = ScaleAction(
+                        "rebalance",
+                        reason=f"share drift {drift:.2f}",
+                    )
+        if any(not j.finished for j in self.jobs):
+            self._push(self.now + self.sc.eval_interval_s, "evaluate")
+
+    def _on_provision(self, jrt: _JobRt, target: int,
+                      reason: str) -> None:
+        if jrt.finished or jrt.pending_target != target:
+            return                     # superseded or moot
+        jrt.pending_target = 0
+        # the pod's *true* K is the provider's, whatever the policy
+        # believed when sizing — the sim-vs-real boundary (DESIGN.md §10)
+        jrt.pending_action = ScaleAction(
+            "grow", chips=target, slowdown=self.cloud.slowdown,
+            reason=reason,
+        )
+
+    # ---- run --------------------------------------------------------------
+
+    def run(self) -> FleetRecord:
+        for jrt in self.jobs:
+            self._push(jrt.spec.arrival_s, "arrival", (jrt,))
+        for t, name, new_deadline in self.sc.deadline_changes:
+            self._push(t, "deadline", (name, new_deadline))
+        for t, name in self.sc.failures:
+            self._push(t, "fail", (name,))
+        first = min(
+            (j.spec.arrival_s for j in self.jobs), default=0.0
+        )
+        self._push(first + self.sc.eval_interval_s, "evaluate")
+
+        n_events = 0
+        while self._heap:
+            n_events += 1
+            if n_events > _MAX_EVENTS:
+                raise RuntimeError("fleet sim event budget exceeded")
+            t, _, kind, payload = heapq.heappop(self._heap)
+            self.now = t
+            if kind == "arrival":
+                self._arrive(payload[0])
+            elif kind == "step_done":
+                self._on_step_done(*payload)
+            elif kind == "evaluate":
+                self._on_evaluate()
+            elif kind == "provision":
+                self._on_provision(*payload)
+            elif kind == "reclaim":
+                jrt, epoch = payload
+                if (not jrt.finished and epoch == jrt.cloud_epoch
+                        and jrt.cloud_chips > 0):
+                    self._rollback(jrt, "spot_reclaim", drop_cloud=True)
+            elif kind == "fail":
+                jrt = self._by_name(payload[0])
+                if jrt is not None and jrt.arrived and not jrt.finished:
+                    self._rollback(jrt, "node_failure", drop_cloud=False)
+            elif kind == "deadline":
+                jrt = self._by_name(payload[0])
+                if jrt is not None and not jrt.finished:
+                    jrt.predictor.set_deadline(payload[1])
+                    jrt.events.append((self.now, "deadline_change", {
+                        "new_deadline_s": payload[1],
+                    }))
+        return self._record()
+
+    def _by_name(self, name: str) -> _JobRt | None:
+        for j in self.jobs:
+            if j.spec.name == name:
+                return j
+        return None
+
+    def _record(self) -> FleetRecord:
+        jobs = []
+        useful = 0.0
+        consumed = 0.0
+        for jrt in self.jobs:
+            elapsed = jrt.finish_s - jrt.spec.arrival_s
+            met = jrt.finished and elapsed <= jrt.predictor.deadline_s
+            cost = self.cloud.cost(jrt.cloud_chip_s)
+            jobs.append(JobRecord(
+                name=jrt.spec.name, finished=jrt.finished,
+                finish_s=jrt.finish_s, elapsed_s=elapsed,
+                deadline_s=jrt.predictor.deadline_s, met_deadline=met,
+                steps_total=jrt.spec.steps_total,
+                cloud_chip_s=jrt.cloud_chip_s, cloud_cost=cost,
+                overhead_s=jrt.overhead_s, rollbacks=jrt.rollbacks,
+                events=jrt.events,
+            ))
+            useful += jrt.steps_done * jrt.spec.chip_seconds_per_step
+            consumed += (
+                jrt.spec.onprem_chips * max(elapsed, 0.0)
+                + jrt.cloud_chip_s
+            )
+        done = [j for j in jobs]
+        return FleetRecord(
+            scenario=self.sc.name,
+            policy=self.jobs[0].policy.name if self.jobs else "?",
+            jobs=jobs,
+            hit_rate=(
+                sum(j.met_deadline for j in done) / len(done)
+                if done else 0.0
+            ),
+            cloud_cost=sum(j.cloud_cost for j in jobs),
+            useful_frac=useful / consumed if consumed > 0 else 0.0,
+            cloud_timeline=self.cloud_timeline,
+            makespan_s=max(
+                (j.finish_s for j in jobs if j.finished), default=0.0
+            ),
+        )

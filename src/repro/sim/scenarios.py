@@ -1,0 +1,204 @@
+"""Scenario generator for the hybrid-fleet simulator (DESIGN.md §11).
+
+Each scenario is a reproducible world the policy suite is scored
+against: foreground scientific jobs on a shared Site, background tenant
+demand (the organic "cluster overloaded" condition), and the fault /
+deadline dynamics the ROADMAP's scenario-diversity axis asks for.  The
+paper's own experiment is essentially ``overload_ramp`` with one job;
+the rest generalize it:
+
+  calm              light contention — the no-cost sanity world
+  overload_ramp     sustained tenant ramp past capacity (paper §3.3)
+  transient_spike   a spike that clears — tests SHRINK/RETIRE and that
+                    cloud spend stops once load is gone
+  deadline_squeeze  the deadline tightens mid-run (paper §2 notes it
+                    "could also change dynamically")
+  spot_market       overload on spot-priced cloud chips that get
+                    reclaimed mid-run
+  node_failures     on-premise nodes die; jobs fall back to checkpoints
+
+All sizes are in simulated seconds/chips; a full policy×scenario sweep
+runs in well under a minute of wall time on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import OverheadModel
+from repro.core.events import BackgroundLoad
+from repro.sim.fleet import CloudProvider, JobSpec
+
+__all__ = [
+    "Scenario",
+    "calm",
+    "deadline_squeeze",
+    "default_scenarios",
+    "node_failures",
+    "overload_ramp",
+    "poisson_background",
+    "spot_market",
+    "transient_spike",
+]
+
+#: shared world constants — one knob set so scenarios stay comparable
+SITE_CHIPS = 256
+ONPREM_CHIPS = 128
+WORK = 1000.0                    # chip·s per step -> 7.8 s/step on 128
+OVERHEADS = OverheadModel(ckpt_s=5.0, provision_s=60.0, restart_s=15.0)
+CLOUD = CloudProvider(
+    legal_slices=(16, 32, 64, 128, 256),
+    provision_delay_s=60.0,
+    price_per_chip_hour=3.0,
+    slowdown=1.4,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    jobs: tuple[JobSpec, ...]
+    background: tuple[BackgroundLoad, ...] = ()
+    deadline_changes: tuple[tuple[float, str, float], ...] = ()
+    failures: tuple[tuple[float, str], ...] = ()
+    site_chips: int = SITE_CHIPS
+    cloud: CloudProvider = CLOUD
+    overheads: OverheadModel = OVERHEADS
+    eval_interval_s: float = 30.0
+    ckpt_every: int = 25
+    description: str = ""
+
+
+def _jobs(n: int, *, steps: int, deadline_s: float,
+          stagger_s: float = 60.0) -> tuple[JobSpec, ...]:
+    return tuple(
+        JobSpec(
+            name=f"job{i}",
+            arrival_s=i * stagger_s,
+            steps_total=steps,
+            deadline_s=deadline_s,
+            chip_seconds_per_step=WORK,
+            onprem_chips=ONPREM_CHIPS,
+        )
+        for i in range(n)
+    )
+
+
+def poisson_background(
+    rng: np.random.Generator,
+    *,
+    rate_per_hour: float,
+    mean_duration_s: float,
+    mean_chips: float,
+    horizon_s: float,
+) -> tuple[BackgroundLoad, ...]:
+    """Poisson tenant arrivals with exponential durations — demand that
+    *emerges* from a stochastic process rather than a script."""
+    loads = []
+    t = 0.0
+    while True:
+        t += float(rng.exponential(3600.0 / rate_per_hour))
+        if t >= horizon_s:
+            break
+        dur = float(rng.exponential(mean_duration_s))
+        chips = max(8, int(rng.poisson(mean_chips)))
+        loads.append(BackgroundLoad(t, t + dur, chips))
+    return tuple(loads)
+
+
+def calm(seed: int = 0) -> Scenario:
+    rng = np.random.default_rng([seed, 100])
+    return Scenario(
+        name="calm",
+        jobs=_jobs(2, steps=150, deadline_s=1700.0),
+        background=poisson_background(
+            rng, rate_per_hour=4.0, mean_duration_s=200.0,
+            mean_chips=32.0, horizon_s=1500.0,
+        ),
+        description="light tenant load; every policy should hit at "
+                    "(near-)zero cloud cost",
+    )
+
+
+def overload_ramp(seed: int = 0) -> Scenario:
+    return Scenario(
+        name="overload_ramp",
+        jobs=_jobs(2, steps=200, deadline_s=2100.0),
+        background=(
+            BackgroundLoad(300.0, 10.0 ** 9, 128, name="ramp1"),
+            BackgroundLoad(500.0, 10.0 ** 9, 256, name="ramp2"),
+        ),
+        description="sustained tenant ramp to 2.5x capacity — the paper "
+                    "§3.3 congestion, emergent from demand",
+    )
+
+
+def transient_spike(seed: int = 0) -> Scenario:
+    return Scenario(
+        name="transient_spike",
+        jobs=_jobs(2, steps=250, deadline_s=2700.0),
+        background=(
+            BackgroundLoad(200.0, 600.0, 384, name="spike"),
+        ),
+        description="a 400 s contention spike that clears — the right "
+                    "move is burst-then-retire; cloud spend must stop",
+    )
+
+
+def deadline_squeeze(seed: int = 0) -> Scenario:
+    jobs = _jobs(2, steps=200, deadline_s=2600.0)
+    return Scenario(
+        name="deadline_squeeze",
+        jobs=jobs,
+        background=(BackgroundLoad(300.0, 10.0 ** 9, 128, name="ramp"),),
+        deadline_changes=tuple(
+            (800.0, j.name, 2000.0) for j in jobs
+        ),
+        description="moderate load, then the deadline tightens from "
+                    "2600 s to 2000 s mid-run",
+    )
+
+
+def spot_market(seed: int = 0) -> Scenario:
+    base = overload_ramp(seed)
+    return dataclasses.replace(
+        base,
+        name="spot_market",
+        jobs=tuple(
+            dataclasses.replace(j, deadline_s=2400.0) for j in base.jobs
+        ),
+        cloud=dataclasses.replace(
+            CLOUD, spot=True, spot_mean_life_s=700.0,
+            price_per_chip_hour=1.0,
+        ),
+        description="overload on spot chips: cheaper, but pods get "
+                    "reclaimed and jobs fall back to checkpoints",
+    )
+
+
+def node_failures(seed: int = 0) -> Scenario:
+    rng = np.random.default_rng([seed, 200])
+    jobs = _jobs(2, steps=200, deadline_s=2500.0)
+    fails = tuple(
+        (float(rng.uniform(400.0, 1400.0)), j.name) for j in jobs
+    )
+    return Scenario(
+        name="node_failures",
+        jobs=jobs,
+        background=(BackgroundLoad(200.0, 10.0 ** 9, 96, name="bg"),),
+        failures=fails,
+        description="on-premise node failures force rollbacks to the "
+                    "last checkpoint under moderate load",
+    )
+
+
+def default_scenarios(seed: int = 0) -> tuple[Scenario, ...]:
+    return (
+        calm(seed),
+        overload_ramp(seed),
+        transient_spike(seed),
+        deadline_squeeze(seed),
+        spot_market(seed),
+        node_failures(seed),
+    )
