@@ -1,42 +1,72 @@
-"""Scan-fused propagation engine vs the seed per-step loop, and
-temporally-blocked vs exchange-every-step halo communication.
+"""Overlap-and-fuse propagation engine vs its two ancestors.
 
-Two claims, measured on the paper's 600×600 / 4-shot geometry:
+Engines, measured on the paper's 600×600 / 4-shot geometry:
 
-* steps/sec: the seed engine dispatched ONE jitted step per timestep
-  from Python with the roll-based laplacian and stacked traces on the
-  host — reproduced here verbatim as the baseline.  The fused engine is
-  a single ``lax.scan`` dispatch (unrolled body, pad-slice laplacian,
-  traces collected inside the scan).  Target: ≥ 3×.
-* ppermute count: the temporally-blocked sharded runner exchanges one
-  packed k·HALO halo per k timesteps — same 2 collective-permutes per
-  block as k=1, i.e. k× fewer per timestep (latency, not bandwidth, is
-  what the slow cluster↔cloud seam charges — paper §3.3).
+* seed loop — ONE jitted step per timestep dispatched from Python with
+  the roll-based laplacian and host-side trace stacking (reproduced
+  verbatim as the baseline).
+* PR 1 scan — single ``lax.scan`` dispatch, unrolled per-step body,
+  pad-slice laplacian, in-scan traces (``make_scan_runner``).
+* fused block — ``make_block_runner``: scan over k-step fused
+  ``wave_block`` regions (field padded across inner steps, damped
+  previous folded into the leapfrog, epilogue-fused injection/traces).
+* sharded fused — the full overlap-and-fuse engine
+  (``make_sharded_scan_runner``): fused blocks per stripe, one packed
+  halo exchange per block issued before the interior compute.  With ≥ 2
+  host devices the stripes run on real parallel XLA executables — the
+  configuration recorded in BENCH_fwi.json.
+* shot-parallel fused — ``make_shot_parallel_runner``: the paper's
+  first-level task-parallel split (independent shots) on the fused
+  block body; zero communication, so it bounds what the host's cores
+  can give the engine.
 
-CPU wall numbers (interpret-free jnp paths); relative ratios are the
-deliverable, absolute times are not TPU projections.
+Timing is INTERLEAVED round-robin (machine-wide throughput drift on a
+shared host hits every engine equally) and best-of is reported.  The
+HBM-traffic proxy is ``hlo_cost.entry_boundary_bytes``: wavefield bytes
+crossing the jit boundary per step — a k-step fused block moves the
+fields once per k steps (the per-op cost_analysis sum cannot see this).
+CPU wall numbers; relative ratios are the deliverable.
 """
 from __future__ import annotations
 
-import time
+import os
+import sys
 
-import jax
-import jax.numpy as jnp
+# 2 host devices so the striped engine measures real parallelism; must
+# precede the first jax import (harmless no-op on real accelerators)
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=2"
+        ).strip()
 
-from repro.fwi.domain import (
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.fwi.domain import (  # noqa: E402
     halo_exchange_plan,
     make_sharded_scan_runner,
     stripe_mesh,
 )
-from repro.fwi.solver import (
+from repro.fwi.solver import (  # noqa: E402
     FWIConfig,
     ShotState,
+    make_block_runner,
     make_scan_runner,
+    make_shot_parallel_runner,
     ricker,
     sponge_taper,
     velocity_model,
 )
-from repro.kernels.stencil.ref import laplacian_roll
+from repro.kernels.stencil.ops import pick_k, wave_block, wave_step  # noqa: E402
+from repro.kernels.stencil.ref import laplacian_roll  # noqa: E402
+from repro.launch.hlo_cost import (  # noqa: E402
+    entry_boundary_bytes,
+    xla_cost_analysis,
+)
 
 
 def _seed_step_fn(cfg: FWIConfig):
@@ -67,63 +97,247 @@ def _seed_step_fn(cfg: FWIConfig):
     return step
 
 
-def _best(fn, repeats: int = 5) -> float:
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
+def host_parallel_scaling() -> float:
+    """Measured 2-process CPU scaling of THIS host right now.
+
+    The container advertises 2 CPUs but shares a hypervisor; under
+    neighbor steal, two busy processes can run SLOWER than one
+    (observed 0.45×–1.9× across hours).  The sharded engines need real
+    parallel cores, so every trajectory point records this probe —
+    a point taken at scaling ≪ 2 understates the engine, not the code.
+    """
+    import subprocess
+
+    code = "x=0\nfor i in range(2_000_000): x+=i*i"
+    t0 = time.perf_counter()
+    subprocess.run([sys.executable, "-c", code])
+    t1 = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ps = [subprocess.Popen([sys.executable, "-c", code]) for _ in range(2)]
+    for p in ps:
+        p.wait()
+    t2 = time.perf_counter() - t0
+    return 2.0 * t1 / max(t2, 1e-9)
+
+
+def _interleaved_best(engines: dict, rounds: int = 6) -> dict[str, float]:
+    """Round-robin timing: every engine measured in every round, so
+    host-wide throughput drift cancels out of the ratios."""
+    for fn in engines.values():
+        fn()                                   # compile
+    best = {name: float("inf") for name in engines}
+    for _ in range(rounds):
+        for name, fn in engines.items():
+            t0 = time.perf_counter()
+            fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
     return best
 
 
-def run() -> list[str]:
-    rows = []
-    cfg = FWIConfig()                      # paper Table 2: 600x600, 4 shots
+def build_engines(cfg: FWIConfig, steps: int, *, stripes: int | None = None):
+    """(engines dict, meta dict) for the steps/sec comparison."""
     st = ShotState.init(cfg)
-    steps = 48
+    k = pick_k(cfg.nz)
+    n = stripes if stripes is not None else min(2, jax.device_count())
 
-    # --- seed per-step Python loop (incl. host-side trace stacking) ----
     step = _seed_step_fn(cfg)
+
     def loop():
         p, pp, traces = st.p, st.p_prev, []
         for t in range(steps):
             p, pp, tr = step(p, pp, t)
             traces.append(tr)
         jax.block_until_ready(jnp.stack(traces, axis=1))
-    loop()                                 # compile
-    t_loop = _best(loop) / steps
-    loop_sps = 1.0 / t_loop
-    rows.append(f"fused_scan.loop_per_step,{t_loop * 1e6:.0f},"
-                f"{loop_sps:.1f}")
 
-    # --- scan-fused runner (traces inside the scan) --------------------
-    runner = make_scan_runner(cfg, collect_traces=True)
+    scan_runner = make_scan_runner(cfg, collect_traces=True)
+
     def scan():
-        jax.block_until_ready(runner(st.p, st.p_prev, 0, steps))
-    scan()                                 # compile
-    t_scan = _best(scan) / steps
-    scan_sps = 1.0 / t_scan
-    rows.append(f"fused_scan.scan_per_step,{t_scan * 1e6:.0f},"
-                f"{scan_sps:.1f}")
-    rows.append(f"fused_scan.speedup_x,0,{t_loop / t_scan:.2f}")
+        jax.block_until_ready(scan_runner(st.p, st.p_prev, 0, steps))
 
-    # --- exchange-every-step vs temporally-blocked (sharded) -----------
-    mesh = stripe_mesh(1)
-    blocked = {}
-    for k in (1, 4):
-        run_k, place, keff = make_sharded_scan_runner(cfg, mesh, k=k)
-        p, pp = place((st.p, st.p_prev))
-        blocks = steps // keff
-        def shard_run():
-            jax.block_until_ready(run_k(p, pp, 0, blocks))
-        shard_run()                        # compile
-        t_k = _best(shard_run) / (blocks * keff)
-        blocked[k] = t_k
-        plan = halo_exchange_plan(cfg, 1, k=keff)
-        rows.append(
-            f"fused_scan.sharded_k{k}_per_step,{t_k * 1e6:.0f},"
-            f"ppermutes_per_step={plan['ppermutes_per_step']}"
+    block_runner = make_block_runner(cfg, k=k)
+
+    def block():
+        jax.block_until_ready(block_runner(st.p, st.p_prev, 0, steps))
+
+    engines = {
+        "seed_loop": loop,
+        "pr1_scan": scan,
+        "fused_block": block,
+    }
+
+    def add_sharded(name, kk, overlap):
+        run_s, place, keff = make_sharded_scan_runner(
+            cfg, stripe_mesh(n), k=kk, overlap=overlap
         )
-    rows.append(f"fused_scan.temporal_block_speedup_x,0,"
-                f"{blocked[1] / blocked[4]:.2f}")
+        ps, pps = place((st.p, st.p_prev))
+        blocks = steps // keff
+
+        def sharded(run_s=run_s, ps=ps, pps=pps, blocks=blocks):
+            jax.block_until_ready(run_s(ps, pps, 0, blocks))
+
+        engines[name] = sharded
+        return keff
+
+    # the shipped engine (schedule auto-selected per backend) at the
+    # heuristic block length and half of it — block length is a tuned
+    # knob, the bench records which setting carried the day
+    keffs = {}
+    for kk in sorted({k, max(k // 2, 1)}):
+        keffs[kk] = add_sharded(f"sharded_fused_k{kk}", kk, None)
+    # the overlap schedule, forced, for the record on this backend
+    add_sharded(f"sharded_overlap_k{k}", k, True)
+
+    # shot-parallel fused blocks: the paper's first-level task-parallel
+    # split (shots are independent) — zero communication, so parallel
+    # efficiency is bounded only by the host
+    if n > 1 and cfg.n_shots % n == 0:
+        run_sp, place_sp = make_shot_parallel_runner(cfg, n, k=k)
+        psp, ppsp = place_sp((st.p, st.p_prev))
+
+        def shot_par():
+            jax.block_until_ready(run_sp(psp, ppsp, 0, steps))
+
+        engines[f"shot_parallel_k{k}"] = shot_par
+
+    meta = {"k": k, "stripes": n, "k_effective": keffs,
+            "sharded_variants": sorted(
+                nm for nm in engines
+                if nm.startswith(("sharded", "shot_parallel"))
+            )}
+    return engines, meta
+
+
+def hbm_boundary_proxy(cfg: FWIConfig, k: int = 4) -> dict:
+    """Per-step WAVEFIELD bytes crossing the launch boundary, step
+    engine vs k-step fused block, via ``entry_boundary_bytes`` — the
+    HBM-traffic proxy for temporal fusion (a k-step block round-trips
+    the fields once per k steps).  The raw ``xla_cost_analysis``
+    'bytes accessed' totals are recorded alongside for transparency:
+    that per-op sum charges every fused-region intermediate identically
+    inside and outside the block, so it cannot see the boundary win."""
+    p = jnp.zeros((cfg.nz, cfg.nx), jnp.float32)
+    v = jnp.full((cfg.nz, cfg.nx), 0.1, jnp.float32)
+    s = jnp.ones((cfg.nz, cfg.nx), jnp.float32)
+    srcv = jnp.zeros((k,), jnp.float32)
+    f_step = jax.jit(
+        lambda a, b, vv, ss: wave_step(a, b, vv, ss)
+    ).lower(p, p, v, s).compile()
+    f_block = jax.jit(
+        lambda a, b, vv, ss, sv: wave_block(a, b, vv, ss, sv, 3, 4)
+    ).lower(p, p, v, s, srcv).compile()
+    shape = (cfg.nz, cfg.nx)
+    step_b = entry_boundary_bytes(f_step.as_text(), shape)["total_bytes"]
+    block_b = entry_boundary_bytes(f_block.as_text(), shape)["total_bytes"]
+    ca_step = float(xla_cost_analysis(f_step).get("bytes accessed", 0.0))
+    ca_block = float(xla_cost_analysis(f_block).get("bytes accessed", 0.0))
+    return {
+        "step_bytes_per_step": float(step_b),
+        "block_bytes_per_step": float(block_b) / k,
+        "k": k,
+        "reduction_x": step_b / (block_b / k),
+        "xla_cost_analysis_step_bytes": ca_step,
+        "xla_cost_analysis_block_bytes_per_step": ca_block / k,
+    }
+
+
+def trajectory_point(cfg: FWIConfig | None = None, steps: int = 48,
+                     rounds: int = 6) -> dict:
+    """One perf-trajectory point (the BENCH_fwi.json payload)."""
+    cfg = cfg or FWIConfig()
+    engines, meta = build_engines(cfg, steps)
+    best = _interleaved_best(engines, rounds=rounds)
+    sps = {name: steps / t for name, t in best.items()}
+    proxy = hbm_boundary_proxy(cfg, k=4)
+    spd = {k: best["pr1_scan"] / t for k, t in best.items()}
+    fused = {nm: s for nm, s in spd.items()
+             if nm.startswith(("sharded_fused", "shot_parallel"))}
+    headline = max(fused, key=fused.get) if fused else "fused_block"
+    return {
+        "config": {"nz": cfg.nz, "nx": cfg.nx, "n_shots": cfg.n_shots,
+                   "timesteps_measured": steps},
+        "host_parallel_scaling": round(host_parallel_scaling(), 2),
+        "engine_meta": meta,
+        "steps_per_sec": {k: round(v, 2) for k, v in sps.items()},
+        "us_per_step": {k: round(t / steps * 1e6, 1)
+                        for k, t in best.items()},
+        "speedup_vs_pr1_scan": {k: round(v, 3) for k, v in spd.items()},
+        "fused_engine": {"name": headline,
+                         "speedup_vs_pr1_scan": round(spd[headline], 3)},
+        "hbm_boundary_proxy": {k: round(v, 3) if isinstance(v, float)
+                               else v for k, v in proxy.items()},
+    }
+
+
+def run() -> list[str]:
+    rows = []
+    cfg = FWIConfig()                      # paper Table 2: 600x600, 4 shots
+    steps = 48
+    point = trajectory_point(cfg, steps=steps)
+    sps = point["steps_per_sec"]
+    us = point["us_per_step"]
+    spd = point["speedup_vs_pr1_scan"]
+
+    rows.append(f"fused_scan.loop_per_step,{us['seed_loop']:.0f},"
+                f"{sps['seed_loop']:.1f}")
+    rows.append(f"fused_scan.scan_per_step,{us['pr1_scan']:.0f},"
+                f"{sps['pr1_scan']:.1f}")
+    rows.append(f"fused_scan.speedup_x,0,"
+                f"{sps['pr1_scan'] / sps['seed_loop']:.2f}")
+    rows.append(f"fused_scan.block_per_step,{us['fused_block']:.0f},"
+                f"{sps['fused_block']:.1f}")
+    rows.append(f"fused_scan.block_speedup_x,0,{spd['fused_block']:.2f}")
+    meta = point["engine_meta"]
+    for nm in meta["sharded_variants"]:
+        rows.append(
+            f"fused_scan.{nm}_per_step,{us[nm]:.0f},"
+            f"n{meta['stripes']}={sps[nm]:.1f}"
+        )
+    head = point["fused_engine"]
+    rows.append(
+        f"fused_scan.fused_engine_speedup_x,0,"
+        f"{head['speedup_vs_pr1_scan']:.2f}"
+    )
+    rows.append(f"fused_scan.fused_engine_config,0,{head['name']}")
+    proxy = point["hbm_boundary_proxy"]
+    rows.append(
+        f"fused_scan.hbm_boundary_step_bytes,0,"
+        f"{proxy['step_bytes_per_step']:.0f}"
+    )
+    rows.append(
+        f"fused_scan.hbm_boundary_block_k{proxy['k']}_bytes,0,"
+        f"{proxy['block_bytes_per_step']:.0f}"
+    )
+    rows.append(
+        f"fused_scan.hbm_boundary_reduction_x,0,{proxy['reduction_x']:.2f}"
+    )
+
+    # temporal blocking: ppermutes per step at k=1 vs k=4 (plan model)
+    for kk in (1, 4):
+        plan = halo_exchange_plan(cfg, 1, k=kk)
+        rows.append(
+            f"fused_scan.halo_plan_k{kk},0,"
+            f"ppermutes_per_step={plan['ppermutes_per_step']};"
+            f"overlap_fraction={plan['overlap_fraction']:.3f}"
+        )
     return rows
+
+
+if __name__ == "__main__":
+    import json
+
+    if len(sys.argv) > 1 and sys.argv[1] == "--write-trajectory":
+        path = sys.argv[2] if len(sys.argv) > 2 else "BENCH_fwi.json"
+        point = trajectory_point()
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (FileNotFoundError, ValueError):
+            doc = {"description": "FWI engine perf trajectory, one point "
+                                  "per engine-touching PR", "points": []}
+        doc["points"].append(point)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {path} ({len(doc['points'])} points)")
+    else:
+        for row in run():
+            print(row)

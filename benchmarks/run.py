@@ -8,16 +8,34 @@
   bench_envs            — Tables 1-2 (platform + workload configuration)
   bench_kernels         — Pallas kernel µbenches (interpret mode)
   bench_roofline        — EXPERIMENTS §Roofline from dry-run artifacts
-  bench_fused_scan      — scan-fused engine vs seed loop; temporal
-                          blocking vs per-step halo exchange
+  bench_fused_scan      — overlap-and-fuse engine vs PR 1 scan vs seed
+                          loop; HBM launch-boundary proxy
   bench_fleet_scenarios — autoscaler policy suite × fleet scenarios
                           (hit-rate / cloud cost / useful-work frac)
+
+Usage:
+  python benchmarks/run.py [--only a,b,...] [--json PATH]
+
+``--json`` additionally writes machine-readable results: one record per
+row with the name/us_per_call/derived fields parsed apart, plus the
+failure count — the schema the CI bench smoke pins.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import traceback
 from pathlib import Path
+
+# 2 host devices so the sharded engine benches measure real parallelism
+# (must precede the first jax import; no-op on real accelerators)
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=2"
+    ).strip()
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
@@ -47,17 +65,58 @@ BENCHES = [
 ]
 
 
-def main() -> None:
+def parse_row(row: str) -> dict:
+    """'name,us,derived' -> record (derived may itself hold commas)."""
+    parts = row.split(",", 2)
+    name = parts[0]
+    try:
+        us = float(parts[1]) if len(parts) > 1 else 0.0
+    except ValueError:
+        us = 0.0
+    return {
+        "name": name,
+        "us_per_call": us,
+        "derived": parts[2] if len(parts) > 2 else "",
+    }
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench names to run")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write machine-readable results to PATH")
+    args = ap.parse_args(argv)
+    only = {s for s in args.only.split(",") if s}
+    unknown = only - {name for name, _ in BENCHES}
+    if unknown:
+        ap.error(f"unknown bench(es): {sorted(unknown)}")
+    selected = [(n, m) for n, m in BENCHES if not only or n in only]
+
     print("name,us_per_call,derived")
     failures = 0
-    for name, mod in BENCHES:
+    results: dict[str, list[dict]] = {}
+    errors: dict[str, str] = {}
+    for name, mod in selected:
         try:
-            for row in mod.run():
+            rows = list(mod.run())
+            results[name] = [parse_row(r) for r in rows]
+            for row in rows:
                 print(row, flush=True)
         except Exception as e:  # keep the harness going
             failures += 1
+            errors[name] = repr(e)
             print(f"{name}.FAILED,0,{e!r}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        doc = {
+            "benches": results,
+            "failures": failures,
+            "errors": errors,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"json results -> {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -1,16 +1,22 @@
 #!/usr/bin/env bash
-# Tier-1 verification + benchmark smoke + docs consistency.
+# Tier-1 verification + engine/benchmark smokes + docs consistency.
 #
 # 1. the repo's tier-1 test command (ROADMAP.md): full pytest, -x -q
-# 2. benchmark smoke: the fused-scan engine rows (steps/sec for
-#    loop-vs-scan, temporal blocking) and the §3.3 overhead rows must
-#    produce output without raising — this catches engine regressions
-#    that unit tests (which run tiny grids) would miss.
-# 3. fleet smoke: the autoscaler policy × scenario sweep must uphold
+# 2. fused-engine smoke: the k=4 fused block (interpret-mode Pallas AND
+#    the pure-XLA block body) must match the per-step reference on a
+#    tiny config — a fast end-to-end equivalence gate for the engine.
+# 3. bench-schema smoke: `benchmarks/run.py --json` on a cheap bench
+#    subset must produce the machine-readable schema (bench schema
+#    breakage fails CI before it breaks the perf-trajectory tooling).
+# 4. benchmark smoke: the fused-scan engine rows (steps/sec for
+#    loop-vs-scan, fused block, sharded variants) and the §3.3 overhead
+#    rows must produce output without raising — this catches engine
+#    regressions that unit tests (which run tiny grids) would miss.
+# 5. fleet smoke: the autoscaler policy × scenario sweep must uphold
 #    the paper's claim at fleet scale — the deadline-aware policy beats
 #    no-burst on hit-rate in the overload scenario at lower cost than
 #    always-burst, and retires the cloud pod once a spike clears.
-# 4. docs consistency: every `DESIGN.md §N` cited under src/ or
+# 6. docs consistency: every `DESIGN.md §N` cited under src/ or
 #    examples/ must resolve to a real section heading in DESIGN.md.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -20,6 +26,57 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
+
+echo "== fused-engine smoke =="
+python - <<'EOF'
+import jax, jax.numpy as jnp, numpy as np
+from repro.fwi.solver import FWIConfig, ShotState, make_step_fn
+from repro.fwi.domain import make_sharded_multistep, stripe_mesh
+
+cfg = FWIConfig(nz=32, nx=64, timesteps=8, n_shots=1, sponge_width=4)
+step = make_step_fn(cfg)
+st = ShotState.init(cfg)
+p, pp = st.p, st.p_prev
+traces = []
+for t in range(8):
+    p, pp, tr = step(p, pp, t)
+    traces.append(tr)
+ref_tr = jnp.stack(traces, axis=1)
+
+for use_pallas, label, tol in ((False, "xla-block", 1.2e-38),
+                               (True, "pallas-interpret", 1e-5)):
+    blk, place = make_sharded_multistep(
+        cfg, stripe_mesh(1), k=4, use_pallas=use_pallas
+    )
+    s = ShotState.init(cfg)
+    a, b = place((s.p, s.p_prev))
+    trs = []
+    for bb in range(2):
+        a, b, tr = blk(a, b, bb * 4)
+        trs.append(tr)
+    tr = jnp.concatenate(trs, axis=1)
+    perr = float(jnp.max(jnp.abs(np.asarray(a) - np.asarray(p))))
+    terr = float(jnp.max(jnp.abs(np.asarray(tr) - np.asarray(ref_tr))))
+    assert perr <= tol and terr <= tol, (label, perr, terr)
+    print(f"fused-engine smoke [{label}]: max err p={perr:.2e} tr={terr:.2e}")
+print("fused-engine smoke OK")
+EOF
+
+echo "== bench-schema smoke =="
+python benchmarks/run.py --only envs,capacity_fit --json /tmp/bench_ci.json
+python - <<'EOF'
+import json
+
+doc = json.load(open("/tmp/bench_ci.json"))
+assert doc["failures"] == 0, doc["errors"]
+assert set(doc["benches"]) == {"envs", "capacity_fit"}, doc["benches"].keys()
+for name, rows in doc["benches"].items():
+    assert rows, f"bench {name} produced no rows"
+    for rec in rows:
+        assert set(rec) == {"name", "us_per_call", "derived"}, rec
+        assert isinstance(rec["us_per_call"], float)
+print("bench json schema OK")
+EOF
 
 echo "== benchmark smoke =="
 python - <<'EOF'

@@ -82,6 +82,38 @@ class OverheadModel:
             seam_syncs_per_step=plan["ppermutes_per_step"] / 2.0,
         )
 
+    def with_overlapped_seam(
+        self, plan: dict, ppermute_latency_s: float,
+        compute_s_per_step: float = 0.0,
+    ) -> "OverheadModel":
+        """Measured seam AFTER comm/compute overlap (DESIGN.md §13).
+
+        The overlapped engine issues the packed exchange first and
+        computes the stripe interior — ``plan["overlap_fraction"]`` of
+        the block's work — while it is in flight, so a k-step block
+        costs ``max(interior, seam) + boundary`` instead of
+        ``compute + seam``.  The seam surcharge over pure compute is
+        therefore only the residue ``max(seam − interior, 0)``:
+
+            seam_block     = ppermutes_per_exchange · t_ppermute
+            interior_block = compute_s_per_step · k · overlap_fraction
+            effective seam = max(seam_block − interior_block, 0)
+
+        With ``compute_s_per_step = 0`` (unknown) this degrades to
+        ``with_measured_seam`` — no overlap credit is taken.  On real
+        hardware the hiding needs async collectives; the planner model
+        assumes the schedule the engine's program order enables."""
+        seam_block = plan["ppermutes_per_exchange"] * ppermute_latency_s
+        interior_block = (
+            compute_s_per_step * plan["steps_per_exchange"]
+            * plan.get("overlap_fraction", 0.0)
+        )
+        return dataclasses.replace(
+            self,
+            seam_latency_s=max(seam_block - interior_block, 0.0),
+            seam_syncs_per_step=plan["ppermutes_per_step"] / 2.0,
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class BurstDecision:

@@ -1,5 +1,5 @@
-"""Striped domain decomposition + temporally-blocked halo exchange
-(paper Fig. 2, communication-avoiding).
+"""Striped domain decomposition + overlapped, temporally-blocked halo
+exchange (paper Fig. 2, communication-avoiding + communication-hiding).
 
 The x-axis (width) is cut into contiguous column stripes, one per device
 on a 1-D ("stripe",) mesh; the height is fixed — exactly the paper's
@@ -11,20 +11,31 @@ Communication avoidance (the paper's "total message size is only 21 KB"
 measurement is about per-step seam LATENCY, which dominates over the
 slow cluster↔cloud link): instead of a 2-column (HALO) exchange every
 timestep, each stripe exchanges a k·HALO-wide halo ONCE and then runs k
-timesteps with ZERO communication.  Redundant halo cells evolve with
-true neighbor physics (the overlapped velocity/sponge fields carry real
-neighbor values); incorrect values creep inward from the overlap edge at
-HALO cells per step, so after k steps exactly the interior stripe is
-clean — standard overlapping ("ghost-zone") temporal blocking.  For
-k > 1 the previous-field edges ride in the SAME message (stacked), so
-ppermute invocations per timestep drop k× (2 per block vs 2 per step)
-while amortized bytes stay flat — the latency win the burst planner
-models via ``halo_exchange_plan``.
+timesteps with ZERO communication.  Incorrect values creep inward from
+a window edge at HALO cells per step, so after k steps exactly the
+owned region is clean — standard overlapping ("ghost-zone") temporal
+blocking.  For k > 1 the previous-field edges ride in the SAME message
+(stacked), so ppermute invocations per timestep drop k× (2 per block vs
+2 per step) while amortized bytes stay flat.
 
-Physical domain edges need no special-casing: the overlapped sponge is
-zero-padded outside the domain, so out-of-domain halo cells multiply to
-zero every inner step — identical to the reference's zero-halo
-convention.
+Communication HIDING (DESIGN.md §13): the packed exchange is issued
+FIRST; the INTERIOR of the stripe — every column ≥ k·HALO from a seam,
+which by construction never reads the halo within one k-step block —
+is computed as one fused ``wave_block`` while the ppermute is in
+flight; two narrow (3·k·HALO-column) BOUNDARY windows that do consume
+the received halos are computed after and stitched in.  Per-block cost
+drops from ``compute + seam`` to ``max(interior, seam) + boundary``.
+The split only pays where collectives are async, so ``pick_overlap``
+auto-selects it per backend (TPU: on; synchronous hosts: the
+comm-avoiding single-window schedule, which has 3× less redundant
+compute).  ``halo_exchange_plan`` exports the seam-traffic AND overlap
+bookkeeping (``overlap_fraction``) that ``OverheadModel
+.with_overlapped_seam`` and the overhead benches consume.
+
+Physical domain edges need no special-casing: every window is
+zero-extended in x, which at a physical edge IS the reference's
+zero-halo convention, and at a seam marks the redundant zone that the
+trapezoidal shrink discards.
 """
 from __future__ import annotations
 
@@ -37,7 +48,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import axis_size, shard_map
 from repro.fwi.solver import FWIConfig, ricker, sponge_taper, velocity_model
-from repro.kernels.stencil.ops import wave_step
+from repro.kernels.stencil.ops import wave_block
 
 HALO = 2
 
@@ -46,6 +57,18 @@ def stripe_mesh(n_devices: int | None = None) -> Mesh:
     devs = jax.devices()
     n = n_devices or len(devs)
     return jax.make_mesh((n,), ("stripe",), devices=devs[:n])
+
+
+def pick_overlap(backend: str | None = None) -> bool:
+    """Schedule selection for the sharded block body (DESIGN.md §13).
+
+    The interior/boundary overlap split only pays where collectives are
+    ASYNC (TPU: collective-permute-start/done hide behind the interior
+    fusion); on hosts whose ppermute is synchronous the split is pure
+    overhead — 6·k·HALO redundant columns instead of 2·k·HALO — so the
+    comm-avoiding single-window schedule wins.  Same auto-selection
+    spirit as the kernel's ``default_interpret``/``pick_bz``."""
+    return (backend or jax.default_backend()) == "tpu"
 
 
 def _exchange_halo(edges_r: jnp.ndarray, edges_l: jnp.ndarray,
@@ -80,18 +103,37 @@ def _overlapped_field(arr: np.ndarray, n: int, pad: int) -> jnp.ndarray:
 
 
 def effective_block(cfg: FWIConfig, n_stripes: int, k: int) -> int:
-    """Clamp k so the k·HALO overlap fits inside one stripe."""
+    """Clamp k so the overlap windows fit inside one stripe: the
+    interior/boundary split needs the two 2·k·HALO-column boundary
+    source regions to be disjoint, i.e. 2·k·HALO ≤ NX/stripes."""
     nxl = cfg.nx // n_stripes
-    return max(1, min(k, nxl // HALO))
+    return max(1, min(k, nxl // (2 * HALO)))
 
 
 @functools.lru_cache(maxsize=32)
 def _sharded_block_parts(cfg: FWIConfig, mesh: Mesh, k: int,
-                         use_pallas: bool):
+                         use_pallas: bool, bz: int | None = None,
+                         overlap: bool = True):
     """(sm, v2e_all, spe_all, place, k): the UNJITTED shard_map'd k-step
-    body plus its closure fields — callers jit at their own boundary
-    (wrapping the body in its own jit inside a lax.scan defeats XLA's
-    loop fusion; see solver.py)."""
+    fused block body plus its closure fields — callers jit at their own
+    boundary (wrapping the body in its own jit inside a lax.scan defeats
+    XLA's loop fusion; see solver.py).
+
+    overlap=True realizes the comm/compute-overlap schedule
+    (DESIGN.md §13): packed halo ppermute issued first; the stripe
+    INTERIOR advanced k fused steps (independent of the exchange,
+    overlappable with it); the two 3·k·HALO boundary windows — batched
+    into ONE ``wave_block`` call — consume the received halos and patch
+    the k·HALO seam-adjacent column strips.  overlap=False is the
+    comm-AVOIDING schedule only: one fused window over the whole
+    extended stripe, exchange on the critical path (less redundant
+    compute — 2·k·HALO vs 6·k·HALO extra columns — for hosts whose
+    collectives are synchronous anyway).  On the XLA path the overlap
+    schedule is pinned bitwise-identical to the reference; the
+    single-window schedule computes the identical op sequence but its
+    different fusion shapes may flush denormal wavefront tails
+    differently — equal up to sub-normal (< 1.2e-38) noise.
+    """
     n = mesh.shape["stripe"]
     assert cfg.nx % n == 0, (cfg.nx, n)
     nxl = cfg.nx // n
@@ -112,55 +154,101 @@ def _sharded_block_parts(cfg: FWIConfig, mesh: Mesh, k: int,
         # p (S, NZ, NXl) local stripe; v2e/spe (1, NZ, NXl + 2·pad)
         v2e, spe = v2e[0], spe[0]
         idx = jax.lax.axis_index("stripe")
+        x0 = idx * nxl                  # global x of local column 0
+        srcv = wavelet[
+            jnp.clip(t0 + jnp.arange(k), 0, cfg.timesteps - 1)
+        ] * (cfg.dt ** 2)
+
+        # --- 1) packed halo exchange, issued FIRST ------------------
         # ONE exchange for the whole k-step block; for k > 1 the p_prev
         # edges ride in the same message (leading stacked axis)
         if k > 1:
             er = jnp.stack([p[..., -pad:], p_prev[..., -pad:]])
             el = jnp.stack([p[..., :pad], p_prev[..., :pad]])
             left, right = _exchange_halo(er, el, "stripe")
-            pe = jnp.concatenate([left[0], p, right[0]], axis=-1)
-            ppe = jnp.concatenate([left[1], p_prev, right[1]], axis=-1)
+            lh_p, lh_pp = left[0], left[1]
+            rh_p, rh_pp = right[0], right[1]
         else:
-            left, right = _exchange_halo(
+            lh_p, rh_p = _exchange_halo(
                 p[..., -pad:], p[..., :pad], "stripe"
             )
-            pe = jnp.concatenate([left, p, right], axis=-1)
             # k=1 never reads the p_prev halo (halo outputs are
             # discarded after one step) — zero-extend
-            zl = jnp.zeros_like(p_prev[..., :pad])
-            ppe = jnp.concatenate([zl, p_prev, zl], axis=-1)
+            lh_pp = jnp.zeros_like(p_prev[..., :pad])
+            rh_pp = lh_pp
 
-        x0 = idx * nxl - pad          # global x of extended column 0
-        width = nxl + 2 * pad
+        # --- k fused steps on a window via wave_block ---------------
+        def window(px, ppx, vw, sw, wx0):
+            # wx0: local column of window column 0 (traced).  Sources
+            # inject into EVERY window covering their column, so
+            # redundant zones track true neighbor physics; each
+            # window's valid region is stitched disjointly below.
+            w = px.shape[-1]
 
-        if use_pallas:
-            # the Pallas kernel is 2-D (NZ, W); map over shots
-            step_fields = jax.vmap(
-                lambda a, b: wave_step(a, b, v2e, spe, use_pallas=True)
+            def one(a, b, zi, xi):
+                xloc = xi - x0 - wx0
+                covered = (xloc >= 0) & (xloc < w)
+                sv = jnp.where(covered, srcv, 0.0)
+                xc = jnp.clip(xloc, 0, w - 1)
+                return wave_block(
+                    a, b, vw, sw, sv, zi, xc,
+                    receiver_row=cfg.receiver_depth,
+                    use_pallas=use_pallas, bz=bz,
+                )
+
+            return jax.vmap(one, in_axes=(0, 0, 0, 0))(
+                px, ppx, src_z, src_x
             )
-        else:
-            def step_fields(a, b):
-                return wave_step(a, b, v2e, spe)
 
-        def inject(pn, zi, xi, src):
-            owned = (xi >= x0) & (xi < x0 + width)
-            xloc = jnp.clip(xi - x0, 0, width - 1)
-            return pn.at[zi, xloc].add(jnp.where(owned, src, 0.0))
-
-        traces = []
-        for j in range(k):
-            pn, pd = step_fields(pe, ppe)
-            # sources must land in the halo overlap too, so redundant
-            # cells track true neighbor physics
-            src = wavelet[jnp.clip(t0 + j, 0, cfg.timesteps - 1)] \
-                * (cfg.dt ** 2)
-            pn = jax.vmap(inject, in_axes=(0, 0, 0, None))(
-                pn, src_z, src_x, src
+        if not overlap:
+            # comm-avoiding only: ONE window over the extended stripe
+            # [-pad, nxl+pad); its zero-extension creep exactly eats
+            # the halos, leaving [0, nxl) valid after k steps
+            pe, ppe, tre = window(
+                jnp.concatenate([lh_p, p, rh_p], axis=-1),
+                jnp.concatenate([lh_pp, p_prev, rh_pp], axis=-1),
+                v2e, spe, -pad,
             )
-            traces.append(pn[:, cfg.receiver_depth, pad: pad + nxl])
-            pe, ppe = pn, pd
-        tr = jnp.stack(traces, axis=1)          # (S, k, NXl)
-        return (pe[..., pad: pad + nxl], ppe[..., pad: pad + nxl], tr)
+            sl = (Ellipsis, slice(pad, pad + nxl))
+            return pe[sl], ppe[sl], tre[sl]
+
+        # --- 2) INTERIOR: the stripe itself, no halo dependency -----
+        # valid after k steps: columns [pad, nxl-pad) — everything the
+        # seams cannot influence within one block
+        pi, ppi, tri = window(
+            p, p_prev, v2e[:, pad: pad + nxl], spe[:, pad: pad + nxl], 0
+        )
+
+        # --- 3) BOUNDARY windows, batched into ONE call -------------
+        # left covers local [-pad, 2·pad) -> valid [0, pad);
+        # right covers [nxl-2·pad, nxl+pad) -> valid [nxl-pad, nxl)
+        bp = jnp.stack([
+            jnp.concatenate([lh_p, p[..., : 2 * pad]], axis=-1),
+            jnp.concatenate([p[..., -2 * pad:], rh_p], axis=-1),
+        ])
+        bpp = jnp.stack([
+            jnp.concatenate([lh_pp, p_prev[..., : 2 * pad]], axis=-1),
+            jnp.concatenate([p_prev[..., -2 * pad:], rh_pp], axis=-1),
+        ])
+        bv = jnp.stack([v2e[:, : 3 * pad], v2e[:, nxl - pad:]])
+        bs = jnp.stack([spe[:, : 3 * pad], spe[:, nxl - pad:]])
+        wx0s = jnp.array([-pad, nxl - 2 * pad], jnp.int32)
+        pb, ppb, trb = jax.vmap(window, in_axes=(0, 0, 0, 0, 0))(
+            bp, bpp, bv, bs, wx0s
+        )
+
+        # --- 4) stitch the disjoint valid regions -------------------
+        def stitch(bnd, mid, axis=-1):
+            sl = [slice(None)] * (bnd.ndim - 1)
+            sl[axis] = slice(pad, 2 * pad)
+            mi = [slice(None)] * mid.ndim
+            mi[axis] = slice(pad, nxl - pad)
+            return jnp.concatenate(
+                [bnd[0][tuple(sl)], mid[tuple(mi)], bnd[1][tuple(sl)]],
+                axis=axis,
+            )
+
+        return (stitch(pb, pi), stitch(ppb, ppi), stitch(trb, tri))
 
     sm = shard_map(
         local_block,
@@ -182,20 +270,25 @@ def _sharded_block_parts(cfg: FWIConfig, mesh: Mesh, k: int,
 
 @functools.lru_cache(maxsize=32)
 def make_sharded_multistep(cfg: FWIConfig, mesh: Mesh, *, k: int = 1,
-                           use_pallas: bool = False):
-    """Temporally-blocked sharded propagator.
+                           use_pallas: bool = False,
+                           bz: int | None = None,
+                           overlap: bool | None = None):
+    """Temporally-blocked, comm/compute-overlapped sharded propagator.
 
     Returns (block_step, place): ``block_step(p, p_prev, t0)`` advances
     ALL k timesteps with a single packed halo exchange and returns
     (p, p_prev, traces) with traces (S, k, NX).  Fields are (S, NZ, NX)
-    sharded on x over "stripe".
+    sharded on x over "stripe".  ``overlap=None`` auto-selects the
+    schedule per backend (``pick_overlap``).
 
     The requested k may be clamped so the overlap fits in one stripe
     (``effective_block``); callers advancing t0 must use the EFFECTIVE
     block size, exposed as ``block_step.k``.
     """
+    if overlap is None:
+        overlap = pick_overlap()
     sm, v2e_all, spe_all, place, k = _sharded_block_parts(
-        cfg, mesh, k, use_pallas
+        cfg, mesh, k, use_pallas, bz, overlap
     )
 
     jit_block = jax.jit(
@@ -229,13 +322,19 @@ def make_sharded_step(cfg: FWIConfig, mesh: Mesh, *,
 
 @functools.lru_cache(maxsize=32)
 def make_sharded_scan_runner(cfg: FWIConfig, mesh: Mesh, *, k: int = 4,
-                             use_pallas: bool = False):
-    """Scan-fused temporally-blocked runner: run(p, p_prev, t0, blocks)
-    advances blocks·k timesteps in ONE dispatch (a lax.scan over k-step
-    blocks, one packed halo exchange per block).  Returns
+                             use_pallas: bool = False,
+                             bz: int | None = None,
+                             overlap: bool | None = None):
+    """Scan-fused, overlapped, temporally-blocked runner:
+    run(p, p_prev, t0, blocks) advances blocks·k timesteps in ONE
+    dispatch (a lax.scan over k-step fused blocks, one packed halo
+    exchange per block, interior overlapped with the exchange where the
+    backend's collectives are async — ``pick_overlap``).  Returns
     (p, p_prev, traces (S, blocks·k, NX))."""
+    if overlap is None:
+        overlap = pick_overlap()
     sm, v2e_all, spe_all, place, k = _sharded_block_parts(
-        cfg, mesh, k, use_pallas
+        cfg, mesh, k, use_pallas, bz, overlap
     )
 
     @functools.partial(jax.jit, static_argnames=("blocks",))
@@ -266,10 +365,24 @@ def halo_bytes_per_step(cfg: FWIConfig, n_stripes: int, k: int = 1) -> int:
 
 
 def halo_exchange_plan(cfg: FWIConfig, n_stripes: int, k: int = 1) -> dict:
-    """Seam-traffic model for the burst planner / overhead benches."""
+    """Seam-traffic + overlap model for the burst planner / benches.
+
+    Beyond the message bookkeeping, exports the comm/compute-overlap
+    shape of the k-step block (DESIGN.md §13): ``overlap_fraction`` is
+    the share of the block's column-work that is INDEPENDENT of the
+    exchange (the interior window) and can therefore hide the seam —
+    ``OverheadModel.with_overlapped_seam`` turns it plus a measured
+    ppermute latency into the effective (un-hidden) seam residue.
+    ``redundant_frac`` is the extra trapezoid compute the boundary
+    windows pay (4·k·HALO of 2·k·HALO patched columns) relative to the
+    stripe width."""
     k = effective_block(cfg, n_stripes, k)
+    pad = k * HALO
+    nxl = cfg.nx // n_stripes
     fields = 1 if k == 1 else 2
-    per_exchange = 2 * fields * k * HALO * cfg.nz * cfg.n_shots * 4
+    per_exchange = 2 * fields * pad * cfg.nz * cfg.n_shots * 4
+    interior_cols = nxl                   # overlappable with the seam
+    boundary_cols = 2 * 3 * pad           # two 3·k·HALO windows, after
     return {
         "k": k,
         "steps_per_exchange": k,
@@ -277,4 +390,8 @@ def halo_exchange_plan(cfg: FWIConfig, n_stripes: int, k: int = 1) -> dict:
         "ppermutes_per_step": 2.0 / k,
         "bytes_per_exchange": per_exchange,
         "bytes_per_step": per_exchange / k,
+        "interior_cols": interior_cols,
+        "boundary_cols": boundary_cols,
+        "overlap_fraction": interior_cols / (interior_cols + boundary_cols),
+        "redundant_frac": 4.0 * pad / nxl,
     }

@@ -29,8 +29,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.orchestrator import Resources, Session
-from repro.fwi.domain import make_sharded_scan_runner, stripe_mesh
+from repro.fwi.domain import (
+    effective_block,
+    make_sharded_scan_runner,
+    stripe_mesh,
+)
 from repro.fwi.solver import FWIConfig, ShotState
+from repro.kernels.stencil.ops import autotune_bz_k, pick_bz_block, pick_k
 
 
 @dataclasses.dataclass
@@ -62,9 +67,10 @@ class FWISession(Session):
         time_model: TimeModel,
         rng: np.random.Generator,
         n_stripes: int | None = None,
-        exchange_interval: int = 4,
+        exchange_interval: int | None = 4,
         scan_block: int = 8,
         use_pallas: bool = False,
+        autotune: bool = False,
     ):
         self.cfg = cfg
         self.res = res
@@ -74,8 +80,24 @@ class FWISession(Session):
         while cfg.nx % n:
             n -= 1
         self.mesh = stripe_mesh(n)
+        bz = None
+        if autotune and use_pallas:
+            # joint (strip height, block length) tuned at the PER-STRIPE
+            # width the engine actually runs (not the global NX);
+            # memoized per (shape, backend) so a RESHARD rebuild does
+            # not re-time.  If the stripe clamp shrinks the tuned k,
+            # re-derive bz for the clamped k instead of keeping the
+            # strip that won jointly with the larger one.
+            bz, exchange_interval = autotune_bz_k(cfg.nz, cfg.nx // n)
+            keff = effective_block(cfg, n, exchange_interval)
+            if keff != exchange_interval:
+                exchange_interval = keff
+                bz = pick_bz_block(cfg.nz, keff)
+        elif exchange_interval is None:
+            exchange_interval = pick_k(cfg.nz)
         self.runner, place, self.k = make_sharded_scan_runner(
-            cfg, self.mesh, k=exchange_interval, use_pallas=use_pallas
+            cfg, self.mesh, k=exchange_interval, use_pallas=use_pallas,
+            bz=bz,
         )
         # timesteps per measured dispatch (multiple of the exchange
         # interval so every block is fully temporally blocked)
@@ -153,8 +175,10 @@ class FWISession(Session):
 
 def fwi_session_factory(cfg: FWIConfig, time_model: TimeModel,
                         *, seed: int = 0, stripes_for=None,
-                        exchange_interval: int = 4, scan_block: int = 8,
-                        use_pallas: bool = False):
+                        exchange_interval: int | None = 4,
+                        scan_block: int = 8,
+                        use_pallas: bool = False,
+                        autotune: bool = False):
     rng = np.random.default_rng(seed)
 
     def factory(res: Resources, start_step: int, restored) -> FWISession:
@@ -163,7 +187,7 @@ def fwi_session_factory(cfg: FWIConfig, time_model: TimeModel,
             cfg, res, start_step, restored,
             time_model=time_model, rng=rng, n_stripes=n,
             exchange_interval=exchange_interval, scan_block=scan_block,
-            use_pallas=use_pallas,
+            use_pallas=use_pallas, autotune=autotune,
         )
 
     return factory

@@ -6,22 +6,35 @@ receiver traces sampled at the surface.  Multiple shots are independent
 (task-parallel) over the same velocity model (data-parallel) — exactly
 the structure the paper exploits to split work between environments.
 
-Propagation engine layout (the scan-fused hot loop):
+Propagation engine layout (the overlap-and-fuse hot loop):
 
 * ``make_step_fn``       — one jitted timestep (kept for interactive /
                            single-step use and as the equivalence oracle).
-* ``make_scan_runner``   — jit-once ``lax.scan`` over timesteps with the
-                           UNJITTED step body inlined (a nested jit
-                           inside a scan body defeats XLA's loop fusion
-                           and costs ~3× on CPU), receiver traces
-                           collected as scan outputs, and the body
-                           unrolled (default 8×) so consecutive steps
-                           fuse.  This is what ``run_forward``, the
-                           calibration sweeps and the driver use.
+* ``make_scan_runner``   — the PR 1 engine: jit-once ``lax.scan`` over
+                           timesteps with the UNJITTED step body inlined
+                           (a nested jit inside a scan body defeats
+                           XLA's loop fusion and costs ~3× on CPU),
+                           receiver traces collected as scan outputs,
+                           and the body unrolled (default 8×).  Kept as
+                           the bench baseline and equivalence oracle.
+* ``make_block_runner``  — the fused engine: ``lax.scan`` over k-step
+                           fused blocks (``kernels.stencil.ops
+                           .wave_block``), each block one fused region —
+                           source injection, sponge damping and receiver
+                           capture in the step epilogue, the damped
+                           previous field folded into the next leapfrog
+                           expression instead of materialized per step,
+                           and (XLA path) the field held padded across
+                           inner steps.  Bit-identical to the scan
+                           runner; this is what ``run_forward`` uses
+                           (DESIGN.md §13).
 * model-building (``velocity_model``/``sponge_taper``/``ricker``) and
-  both runner factories are memoized on the (frozen, hashable)
-  ``FWIConfig`` — a RESHARD-triggered session rebuild re-uses the cached
-  arrays and compiled runners instead of recomputing and re-tracing.
+  all runner factories are memoized on the (frozen, hashable)
+  ``FWIConfig`` plus their full engine knobs — ``make_block_runner``
+  keys on ``(cfg, k, bz, use_pallas, collect_traces)`` so autotuned
+  variants never collide in the cache, and a RESHARD-triggered session
+  rebuild re-uses the cached arrays and compiled runners instead of
+  recomputing and re-tracing.
 """
 from __future__ import annotations
 
@@ -32,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.stencil.ops import wave_step
+from repro.kernels.stencil.ops import pick_k, wave_block, wave_step
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,16 +195,166 @@ def make_scan_runner(cfg: FWIConfig, *, use_pallas: bool = False,
     return run
 
 
+def _block_scan_body(cfg: FWIConfig, k: int, use_pallas: bool,
+                     bz: int | None, collect_traces: bool):
+    """Shared scan-over-fused-blocks body: local_run(p, p_prev, src_z,
+    src_x, t0, steps static) -> (p, p_prev[, traces]) — UNJITTED, so
+    both the single-host and the shot-sharded runner jit at their own
+    boundary.  Source positions are arguments (not closure) so a
+    shot-sharded caller can pass its local shard's sources."""
+    v = velocity_model(cfg)
+    v2dt2 = (v * cfg.dt / cfg.dx) ** 2
+    sponge = sponge_taper(cfg)
+    wavelet = ricker(cfg)
+
+    def block(p, p_prev, src_z, src_x, t0b, kk: int):
+        srcv = wavelet[
+            jnp.clip(t0b + jnp.arange(kk), 0, cfg.timesteps - 1)
+        ] * (cfg.dt ** 2)
+
+        def one(a, b, zi, xi):
+            return wave_block(
+                a, b, v2dt2, sponge, srcv, zi, xi,
+                receiver_row=cfg.receiver_depth,
+                use_pallas=use_pallas, bz=bz,
+            )
+
+        return jax.vmap(one, in_axes=(0, 0, 0, 0))(
+            p, p_prev, src_z, src_x
+        )
+
+    def local_run(p, p_prev, src_z, src_x, t0, steps: int):
+        blocks, tail = divmod(steps, k)
+
+        def body(carry, b):
+            pc, pp = carry
+            pn, pd, tr = block(pc, pp, src_z, src_x, t0 + b * k, k)
+            return (pn, pd), (tr if collect_traces else None)
+
+        traces = jnp.zeros((p.shape[0], 0, cfg.nx), jnp.float32)
+        if blocks:
+            (p, p_prev), trs = jax.lax.scan(
+                body, (p, p_prev), jnp.arange(blocks)
+            )
+            if collect_traces:
+                # (blocks, S, k, NX) -> (S, blocks*k, NX)
+                trs = jnp.moveaxis(trs, 0, 1)
+                traces = trs.reshape(trs.shape[0], -1, trs.shape[-1])
+        if tail:
+            p, p_prev, tr = block(
+                p, p_prev, src_z, src_x, t0 + blocks * k, tail
+            )
+            if collect_traces:
+                traces = jnp.concatenate([traces, tr], axis=1)
+        if collect_traces:
+            return p, p_prev, traces
+        return p, p_prev
+
+    return local_run
+
+
+@functools.lru_cache(maxsize=64)
+def make_block_runner(cfg: FWIConfig, *, k: int | None = None,
+                      use_pallas: bool = False, bz: int | None = None,
+                      collect_traces: bool = True):
+    """jit-once FUSED multi-step propagator: ``lax.scan`` over k-step
+    fused blocks (one ``wave_block`` per block — DESIGN.md §13).
+
+    run(p, p_prev, t0, steps) -> (p, p_prev, traces (S, steps, NX))
+
+    ``t0`` is traced, ``steps`` static; a non-multiple-of-k step count
+    runs a tail block of the remainder length.  Bit-identical to
+    ``make_scan_runner`` on the XLA path (the block body is a pure
+    re-scheduling of the same ops).  Memoized on the FULL knob set
+    (cfg, k, bz, use_pallas, collect_traces) so autotuned variants
+    don't collide in the cache."""
+    if k is None:
+        k = pick_k(cfg.nz)
+    pos = cfg.shot_positions()
+    src_z = jnp.asarray(pos[:, 0])
+    src_x = jnp.asarray(pos[:, 1])
+    local_run = _block_scan_body(cfg, k, use_pallas, bz, collect_traces)
+
+    @functools.partial(jax.jit, static_argnames=("steps",))
+    def run(p, p_prev, t0, steps: int):
+        return local_run(p, p_prev, src_z, src_x, t0, steps)
+
+    run.k = k
+    return run
+
+
+@functools.lru_cache(maxsize=16)
+def make_shot_parallel_runner(cfg: FWIConfig, n_devices: int, *,
+                              k: int | None = None,
+                              use_pallas: bool = False,
+                              bz: int | None = None,
+                              collect_traces: bool = True):
+    """Fused block runner with the SHOT axis sharded over devices — the
+    paper's FIRST-level task-parallel split (§3.1: shots are
+    independent), realized on the fused engine (DESIGN.md §13).
+
+    Zero communication: each device owns n_shots/n whole-domain shots
+    and runs the identical scan-over-fused-blocks body on its shard, so
+    parallel efficiency is bounded only by the host (no halos, no
+    redundant columns — the complementary axis to the striped γ-split
+    in fwi/domain.py, which is what cross-ENVIRONMENT placement needs).
+    Returns (run, place): run(p, p_prev, t0, steps) as make_block_runner;
+    place() shards the (S, NZ, NX) fields on shot axis 0.
+
+    Contract: matches the single-host block runner to f32-ULP
+    `allclose` (~1e-7 relative), NOT bitwise — the smaller per-device
+    batch changes XLA's vectorization/FMA contraction of the stencil
+    fusions.  (The striped runner keeps the batch intact and stays
+    bitwise; this one trades that for perfect parallel efficiency.)"""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    if k is None:
+        k = pick_k(cfg.nz)
+    assert cfg.n_shots % n_devices == 0, (cfg.n_shots, n_devices)
+    mesh = jax.make_mesh((n_devices,), ("shot",),
+                         devices=jax.devices()[:n_devices])
+    pos = cfg.shot_positions()
+    src_z = jnp.asarray(pos[:, 0])
+    src_x = jnp.asarray(pos[:, 1])
+    local_run = _block_scan_body(cfg, k, use_pallas, bz, collect_traces)
+    out_specs = (
+        (P("shot"), P("shot"), P("shot")) if collect_traces
+        else (P("shot"), P("shot"))
+    )
+
+    @functools.partial(jax.jit, static_argnames=("steps",))
+    def run(p, p_prev, t0, steps: int):
+        sm = shard_map(
+            lambda a, b, sz, sx, t: local_run(a, b, sz, sx, t, steps),
+            mesh=mesh,
+            in_specs=(P("shot"), P("shot"), P("shot"), P("shot"), P()),
+            out_specs=out_specs,
+            check_vma=False,
+        )
+        return sm(p, p_prev, src_z, src_x, t0)
+
+    sh = NamedSharding(mesh, P("shot"))
+
+    def place(state_fields):
+        return jax.device_put(state_fields, sh)
+
+    run.k = k
+    return run, place
+
+
 def run_forward(cfg: FWIConfig, *, use_pallas: bool = False,
                 state: ShotState | None = None,
-                steps: int | None = None):
+                steps: int | None = None, k: int | None = None):
     """Propagate `steps` timesteps (default: to completion) through the
-    scan-fused runner.  Returns (state, traces (S, T, NX) for the steps
-    actually run)."""
+    fused block runner.  Returns (state, traces (S, T, NX) for the
+    steps actually run)."""
     st = state or ShotState.init(cfg)
     steps = steps if steps is not None else cfg.timesteps - st.t
     if steps <= 0:
         return st, jnp.zeros((cfg.n_shots, 0, cfg.nx), jnp.float32)
-    run = make_scan_runner(cfg, use_pallas=use_pallas, collect_traces=True)
+    run = make_block_runner(cfg, k=k, use_pallas=use_pallas,
+                            collect_traces=True)
     p, pp, traces = run(st.p, st.p_prev, st.t, steps)
     return ShotState(p=p, p_prev=pp, t=st.t + steps), traces

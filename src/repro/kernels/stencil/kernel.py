@@ -66,6 +66,15 @@ def pick_bz(nz: int, cap: int = 128) -> int:
     return max(ok) if ok else nz
 
 
+def _shift_x(a, d: int, nx: int):
+    """x-shift with zero boundary fill (shared by both stencil kernels)."""
+    rolled = jnp.roll(a, d, axis=1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    if d > 0:
+        return jnp.where(idx >= d, rolled, 0.0)
+    return jnp.where(idx < nx + d, rolled, 0.0)
+
+
 def _wave_kernel(
     p_ref, p_prev_ref, v2dt2_ref, sponge_ref, p_next_ref, p_damped_ref,
     *, bz: int,
@@ -94,15 +103,8 @@ def _wave_kernel(
                  + ext[HALO + 2: HALO + 2 + bz, :])
 
     # x-direction stencil with zero boundary fill (full width in-strip)
-    def shift_x(a, d):
-        rolled = jnp.roll(a, d, axis=1)
-        idx = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
-        if d > 0:
-            return jnp.where(idx >= d, rolled, 0.0)
-        return jnp.where(idx < nx + d, rolled, 0.0)
-
-    lap += C1 * (shift_x(center, 1) + shift_x(center, -1))
-    lap += C2 * (shift_x(center, 2) + shift_x(center, -2))
+    lap += C1 * (_shift_x(center, 1, nx) + _shift_x(center, -1, nx))
+    lap += C2 * (_shift_x(center, 2, nx) + _shift_x(center, -2, nx))
 
     sponge = sponge_ref[...]
     p_next = (2.0 * center - p_prev_ref[...] + v2dt2_ref[...] * lap) * sponge
@@ -144,16 +146,171 @@ def wave_step_pallas(
     )(p, p_prev, v2dt2, sponge)
 
 
-@functools.lru_cache(maxsize=None)
-def autotune_bz(
-    nz: int, nx: int, candidates: tuple[int, ...] = (8, 16, 32, 64, 128),
-    repeats: int = 3,
-) -> int:
-    """Sweep strip heights on this backend, return the fastest.
+def pick_bz_block(nz: int, k: int, cap: int = 128) -> int:
+    """Strip height for the k-step ``wave_block`` kernel.
 
-    Wall-clock autotune over the real kernel (interpret mode off-TPU, so
-    absolute numbers are NOT TPU projections — but the relative ranking
-    tracks the tiling trade-off).  Memoized per (nz, nx, candidates)."""
+    Largest divisor of nz ≤ cap (preferring 8-aligned strips) whose
+    trapezoidal window ``bz + 2·k·HALO`` still fits inside the field;
+    grids too short for any multi-strip trapezoid fall back to a single
+    whole-height strip (window == field, both edges physical)."""
+    pad = 2 * k * HALO
+    aligned = [b for b in range(8, cap + 1, 8)
+               if nz % b == 0 and b + pad <= nz]
+    if aligned:
+        return max(aligned)
+    ok = [b for b in range(2, cap + 1) if nz % b == 0 and b + pad <= nz]
+    # no multi-row strip fits (e.g. prime nz): one whole-height strip
+    # beats a degenerate 1-row tiling that recomputes the window nz times
+    return max(ok) if ok else nz
+
+
+def pick_k(nz: int, cap: int = 8) -> int:
+    """Heuristic fused-block length to pair with ``pick_bz_block``.
+
+    Largest power-of-two ≤ cap whose trapezoid still admits a
+    multi-strip tiling of nz; degenerate (short) grids get whatever cap
+    allows — a single whole-height strip handles any k."""
+    k = cap
+    while k > 1 and pick_bz_block(nz, k) == nz and nz > 2 * k * HALO:
+        k //= 2
+    return max(k, 1)
+
+
+def _wave_block_kernel(
+    p_ref, pp_ref, v2dt2_ref, sponge_ref, srcv_ref, srcp_ref,
+    p_out_ref, pp_out_ref, tr_ref,
+    *, bz: int, win: int, k: int, rrow: int,
+):
+    """k fused timesteps on one z-strip (ghost-zone temporal blocking).
+
+    Each program owns a (bz, NX) strip but computes on a (win, NX)
+    window, ``win = bz + 2·k·HALO`` clamped to NZ, sliced out of the
+    single VMEM-resident copy of each field.  Every inner step
+    zero-extends the window in z: at a physical domain edge that IS the
+    boundary condition; at an interior window edge it seeds a wrong
+    value whose influence creeps inward HALO rows per step — after k
+    steps exactly the owned strip is clean (the window start is clamped
+    so the strip sits ≥ k·HALO rows from any interior window edge).
+    Source injection, sponge damping and the receiver-row capture run in
+    the step epilogue, so k launches and 2k wavefield HBM round-trips
+    collapse into one pallas_call (DESIGN.md §13)."""
+    i = pl.program_id(0)
+    nz = p_ref.shape[0]
+    nx = p_ref.shape[1]
+    row0 = i * bz
+    start = jnp.clip(row0 - k * HALO, 0, nz - win)
+    off = row0 - start          # strip offset inside the window
+
+    cur = p_ref[pl.ds(start, win), :]
+    prevd = pp_ref[pl.ds(start, win), :]      # already sponge-damped
+    vw = v2dt2_ref[pl.ds(start, win), :]
+    sw = sponge_ref[pl.ds(start, win), :]
+    zi = srcp_ref[0, 0]
+    xi = srcp_ref[0, 1]
+    iz = jax.lax.broadcasted_iota(jnp.int32, (win, nx), 0)
+    ix = jax.lax.broadcasted_iota(jnp.int32, (win, nx), 1)
+    zero_h = jnp.zeros((HALO, nx), cur.dtype)
+    own_receiver = (rrow >= row0) & (rrow < row0 + bz)
+
+    for j in range(k):
+        ext = jnp.concatenate([zero_h, cur, zero_h], axis=0)
+        lap = 2.0 * C0 * cur
+        lap += C1 * (ext[HALO - 1: HALO - 1 + win, :]
+                     + ext[HALO + 1: HALO + 1 + win, :])
+        lap += C2 * (ext[HALO - 2: HALO - 2 + win, :]
+                     + ext[HALO + 2: HALO + 2 + win, :])
+        lap += C1 * (_shift_x(cur, 1, nx) + _shift_x(cur, -1, nx))
+        lap += C2 * (_shift_x(cur, 2, nx) + _shift_x(cur, -2, nx))
+        pn = (2.0 * cur - prevd + vw * lap) * sw
+        # epilogue: source injection + receiver-row capture, fused
+        pn = pn + jnp.where(
+            (iz == zi - start) & (ix == xi), srcv_ref[0, j], 0.0
+        )
+
+        @pl.when(own_receiver)
+        def _capture(pn=pn, j=j):
+            tr_ref[j, :] = jax.lax.dynamic_slice_in_dim(
+                pn, rrow - start, 1, axis=0
+            )[0, :]
+
+        prevd = cur * sw
+        cur = pn
+
+    p_out_ref[...] = jax.lax.dynamic_slice_in_dim(cur, off, bz, axis=0)
+    pp_out_ref[...] = jax.lax.dynamic_slice_in_dim(prevd, off, bz, axis=0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bz", "receiver_row", "interpret")
+)
+def wave_block_pallas(
+    p: jax.Array,          # (NZ, NX) f32
+    p_prev: jax.Array,     # (NZ, NX), already sponge-damped
+    v2dt2: jax.Array,
+    sponge: jax.Array,
+    src_vals: jax.Array,   # (k,) source amplitude per inner step
+    src_z,                 # scalar int source row
+    src_x,                 # scalar int source column
+    *,
+    receiver_row: int = 0,
+    bz: int | None = None,
+    interpret: bool | None = None,
+):
+    """k fused timesteps in ONE pallas_call (k = src_vals.shape[0]).
+
+    Returns (p_k, p_prev_damped_k, traces (k, NX)).  Matches
+    ``wave_block_ref`` to stencil-reorder tolerance (the z/x accumulation
+    order differs from the reference — documented `allclose`, not
+    bitwise; the pure-XLA block path carries the bitwise contract)."""
+    nz, nx = p.shape
+    k = int(src_vals.shape[0])
+    if bz is None:
+        bz = pick_bz_block(nz, k)
+    if interpret is None:
+        interpret = default_interpret()
+    win = min(bz + 2 * k * HALO, nz)
+    assert nz % bz == 0, (nz, bz)
+    # reject oversized explicit strips: a bz < nz whose trapezoid spills
+    # past the field would make every program recompute the WHOLE field
+    # (grid-fold redundant work); only the single whole-height strip may
+    # clamp the window
+    assert bz == nz or bz + 2 * k * HALO <= nz, (nz, bz, k)
+    grid = (nz // bz,)
+    whole = pl.BlockSpec((nz, nx), lambda i: (0, 0))   # fetched once
+    strip = pl.BlockSpec((bz, nx), lambda i: (i, 0))
+    srcv = src_vals.reshape(1, k).astype(p.dtype)
+    srcp = jnp.stack(
+        [jnp.asarray(src_z, jnp.int32), jnp.asarray(src_x, jnp.int32)]
+    ).reshape(1, 2)
+    out_shape = [
+        jax.ShapeDtypeStruct((nz, nx), p.dtype),
+        jax.ShapeDtypeStruct((nz, nx), p.dtype),
+        jax.ShapeDtypeStruct((k, nx), p.dtype),
+    ]
+    return pl.pallas_call(
+        functools.partial(
+            _wave_block_kernel, bz=bz, win=win, k=k,
+            rrow=int(receiver_row),
+        ),
+        grid=grid,
+        in_specs=[whole, whole, whole, whole,
+                  pl.BlockSpec((1, k), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 2), lambda i: (0, 0))],
+        out_specs=[strip, strip, pl.BlockSpec((k, nx), lambda i: (0, 0))],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(p, p_prev, v2dt2, sponge, srcv, srcp)
+
+
+def _tune_backend(backend: str | None) -> str:
+    return backend if backend is not None else jax.default_backend()
+
+
+@functools.lru_cache(maxsize=None)
+def _autotune_bz_cached(
+    nz: int, nx: int, candidates: tuple[int, ...], repeats: int,
+    backend: str,
+) -> int:
     cands = [b for b in candidates if nz % b == 0]
     if not cands:
         return pick_bz(nz)
@@ -173,3 +330,67 @@ def autotune_bz(
         if dt < best_t:
             best_bz, best_t = b, dt
     return best_bz
+
+
+def autotune_bz(
+    nz: int, nx: int, candidates: tuple[int, ...] = (8, 16, 32, 64, 128),
+    repeats: int = 3, backend: str | None = None,
+) -> int:
+    """Sweep strip heights on this backend, return the fastest.
+
+    Wall-clock autotune over the real kernel (interpret mode off-TPU, so
+    absolute numbers are NOT TPU projections — but the relative ranking
+    tracks the tiling trade-off).  Memoized per (shape, candidates,
+    backend): an FWISession rebuilt after RESHARD re-reads the cached
+    choice instead of re-timing."""
+    return _autotune_bz_cached(
+        nz, nx, tuple(candidates), repeats, _tune_backend(backend)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _autotune_bz_k_cached(
+    nz: int, nx: int, bz_candidates: tuple[int, ...],
+    k_candidates: tuple[int, ...], repeats: int, backend: str,
+) -> tuple[int, int]:
+    key = jax.random.key(0)
+    p = jax.random.normal(key, (nz, nx), jnp.float32)
+    v = jnp.full((nz, nx), 0.1, jnp.float32)
+    s = jnp.ones((nz, nx), jnp.float32)
+    best, best_t = (pick_bz_block(nz, pick_k(nz)), pick_k(nz)), float("inf")
+    for k in k_candidates:
+        srcv = jnp.zeros((k,), jnp.float32)
+        bzs = [b for b in bz_candidates
+               if nz % b == 0 and (b + 2 * k * HALO <= nz or b == nz)]
+        if not bzs:
+            bzs = [pick_bz_block(nz, k)]
+        for b in bzs:
+            out = wave_block_pallas(p, p, v, s, srcv, 0, 0, bz=b)
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                out = wave_block_pallas(p, p, v, s, srcv, 0, 0, bz=b)
+            jax.block_until_ready(out)
+            dt = (time.perf_counter() - t0) / (repeats * k)   # per step
+            if dt < best_t:
+                best, best_t = (b, k), dt
+    return best
+
+
+def autotune_bz_k(
+    nz: int, nx: int,
+    bz_candidates: tuple[int, ...] = (8, 16, 24, 32, 40, 64, 120, 128),
+    k_candidates: tuple[int, ...] = (1, 2, 4, 8),
+    repeats: int = 3, backend: str | None = None,
+) -> tuple[int, int]:
+    """Jointly tune (strip height, fused-block length) for ``wave_block``.
+
+    Amortized per-STEP wall clock decides, so longer blocks only win
+    when the extra trapezoid compute pays for the saved round trips.
+    Memoized per (shape, candidates, backend) in-process — repeated
+    ``FWISession`` rebuilds after a RESHARD reuse the cached pair
+    instead of re-timing (DESIGN.md §13)."""
+    return _autotune_bz_k_cached(
+        nz, nx, tuple(bz_candidates), tuple(k_candidates), repeats,
+        _tune_backend(backend),
+    )

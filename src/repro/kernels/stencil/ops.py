@@ -1,12 +1,21 @@
-"""Jit'd wrapper for the wave-step kernel with a portable fallback.
+"""Jit'd wrappers for the wave-step / wave-block kernels with portable
+fallbacks.
 
-use_pallas=True runs the Pallas kernel; ``interpret`` auto-selects from
-the backend (compiled on TPU; interpret mode elsewhere, where the kernel
-body still executes with real Pallas semantics, validating BlockSpec
-tiling/halo logic).  ``bz=None`` picks an aligned strip height via
-``pick_bz`` (or run ``autotune_bz`` for a measured choice).
-use_pallas=False is the pure-jnp oracle used on CPU paths (XLA fuses it
-adequately; the Pallas path is the TPU deployment target).
+``wave_step`` advances one timestep; ``wave_block`` advances k fused
+timesteps (k = src_vals.shape[0]) with source injection, sponge damping
+and receiver-row capture in the step epilogue — one kernel launch and
+one wavefield HBM round trip per block instead of per step
+(DESIGN.md §13).
+
+use_pallas=True runs the Pallas kernels; ``interpret`` auto-selects
+from the backend through the ONE shared helper ``default_interpret``
+(compiled on TPU; interpret mode elsewhere, where the kernel body still
+executes with real Pallas semantics, validating BlockSpec tiling /
+trapezoid logic).  use_pallas=False is the pure-jnp path used on
+CPU/GPU: for ``wave_block`` it is the jitted k-step fused body
+(``wave_block_ref``), BIT-IDENTICAL to k sequential reference steps;
+the Pallas block matches to documented `allclose` tolerance (its z/x
+stencil accumulation order differs).
 """
 from __future__ import annotations
 
@@ -14,15 +23,21 @@ import jax
 
 from repro.kernels.stencil.kernel import (
     autotune_bz,
+    autotune_bz_k,
     default_interpret,
     pick_bz,
+    pick_bz_block,
+    pick_k,
+    wave_block_pallas,
     wave_step_pallas,
 )
-from repro.kernels.stencil.ref import wave_step_ref
+from repro.kernels.stencil.ref import wave_block_ref, wave_step_ref
 
 __all__ = [
     "wave_step", "wave_step_jit", "wave_step_pallas",
-    "autotune_bz", "default_interpret", "pick_bz",
+    "wave_block", "wave_block_jit", "wave_block_pallas",
+    "autotune_bz", "autotune_bz_k", "default_interpret",
+    "pick_bz", "pick_bz_block", "pick_k",
 ]
 
 
@@ -38,4 +53,29 @@ def wave_step(p, p_prev, v2dt2, sponge, *, use_pallas=False,
 
 wave_step_jit = jax.jit(
     wave_step, static_argnames=("use_pallas", "bz", "interpret")
+)
+
+
+def wave_block(p, p_prev, v2dt2, sponge, src_vals, src_z, src_x, *,
+               receiver_row: int = 0, use_pallas: bool = False,
+               bz: int | None = None, interpret: bool | None = None):
+    """k fused timesteps; returns (p_k, p_prev_damped_k, traces (k, NX)).
+
+    ``p_prev`` follows the engine convention: it is the already
+    sponge-damped previous field, and the returned second output is the
+    damped p_{k-1} — the (p, p_prev) carry the scan runners thread."""
+    if use_pallas:
+        return wave_block_pallas(
+            p, p_prev, v2dt2, sponge, src_vals, src_z, src_x,
+            receiver_row=receiver_row, bz=bz, interpret=interpret,
+        )
+    return wave_block_ref(
+        p, p_prev, v2dt2, sponge, src_vals, src_z, src_x,
+        receiver_row=receiver_row,
+    )
+
+
+wave_block_jit = jax.jit(
+    wave_block,
+    static_argnames=("receiver_row", "use_pallas", "bz", "interpret"),
 )

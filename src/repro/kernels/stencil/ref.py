@@ -28,6 +28,7 @@ scan engine built on the fast form reproduces seed results exactly.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 C0 = -5.0 / 2.0
@@ -95,3 +96,72 @@ def wave_step_ref(
     lap = laplacian(p)
     p_next = (2.0 * p - p_prev + v2dt2 * lap) * sponge
     return p_next, p * sponge
+
+
+def laplacian_of_padded(padded: jnp.ndarray, nz: int, nx: int) -> jnp.ndarray:
+    """``laplacian`` reading an ALREADY-padded field (..., NZ+4, NX+4).
+
+    Same nine slices, same accumulation order — bit-identical to
+    ``laplacian(padded[..., 2:-2, 2:-2])`` — but without re-materializing
+    the padded copy every step.  The k-step fused block keeps the field
+    padded across inner steps, so the per-step ``jnp.pad`` of the
+    production form disappears (DESIGN.md §13).
+    """
+
+    def sh(dz: int, dx: int) -> jnp.ndarray:
+        return padded[..., _PAD - dz: _PAD - dz + nz,
+                      _PAD - dx: _PAD - dx + nx]
+
+    lap = 2.0 * C0 * sh(0, 0)
+    for d in (1, 2):
+        c = C1 if d == 1 else C2
+        lap = lap + c * (sh(d, 0) + sh(-d, 0) + sh(0, d) + sh(0, -d))
+    return lap
+
+
+def wave_block_ref(
+    p: jnp.ndarray,        # (NZ, NX) current pressure
+    p_prev: jnp.ndarray,   # (NZ, NX) previous, already sponge-damped
+    v2dt2: jnp.ndarray,    # (NZ, NX)
+    sponge: jnp.ndarray,   # (NZ, NX)
+    src_vals: jnp.ndarray,  # (k,) source amplitude per inner step
+    src_z,                 # scalar int source row
+    src_x,                 # scalar int source column
+    *,
+    receiver_row: int = 0,
+):
+    """k fused timesteps with in-block source injection + receiver rows.
+
+    The pure-XLA mirror of the Pallas ``wave_block`` kernel (k is static,
+    read off ``src_vals.shape``).  Two fusions vs the step-at-a-time
+    form (DESIGN.md §13):
+
+    * the field stays PADDED across inner steps (one pad on entry, one
+      slice on exit) instead of one ``jnp.pad`` materialization per step;
+    * the damped previous field is folded into the next step's leapfrog
+      expression (``cur * sponge`` fuses into the elementwise update)
+      instead of being materialized as a second full-array output every
+      step — only the final block boundary writes it.
+
+    Both are pure re-schedulings of the identical ops in identical
+    order: the k-step result is BIT-IDENTICAL to k sequential
+    ``wave_step_ref`` + injection steps (the contract the equivalence
+    tests pin).  Returns (p_k, p_prev_damped_k, traces (k, NX)).
+    """
+    k = src_vals.shape[0]
+    nz, nx = p.shape[-2], p.shape[-1]
+    ppad = jnp.pad(p, ((_PAD, _PAD), (_PAD, _PAD)))
+    prevd = p_prev
+    traces = []
+    for j in range(k):
+        cur = ppad[_PAD: _PAD + nz, _PAD: _PAD + nx]
+        lap = laplacian_of_padded(ppad, nz, nx)
+        pn = (2.0 * cur - prevd + v2dt2 * lap) * sponge
+        pn = pn.at[src_z, src_x].add(src_vals[j])
+        traces.append(
+            jax.lax.dynamic_slice_in_dim(pn, receiver_row, 1, axis=0)[0]
+        )
+        prevd = cur * sponge
+        ppad = jax.lax.dynamic_update_slice(ppad, pn, (_PAD, _PAD))
+    return (ppad[_PAD: _PAD + nz, _PAD: _PAD + nx], prevd,
+            jnp.stack(traces))

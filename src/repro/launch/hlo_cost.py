@@ -743,6 +743,47 @@ class HloCostModel:
         return self.comp_cost(self.entry)
 
 
+def entry_boundary_bytes(text: str, field_shape: tuple[int, ...]) -> dict:
+    """Launch-boundary traffic of a compiled module for one array shape.
+
+    Sums the bytes of ENTRY parameters and results whose trailing dims
+    equal ``field_shape`` — the data that must round-trip HBM between
+    kernel launches no matter how well the interior fuses.  This is the
+    HBM-traffic proxy for fused multi-step engines: a k-step fused block
+    moves the wavefields across the boundary once per k steps, so its
+    per-step boundary bytes drop k× vs the step-at-a-time engine
+    (DESIGN.md §13; the per-op ``cost_analysis`` sum cannot see this —
+    it charges intermediates identically inside and outside the fused
+    region).  Returns {"param_bytes", "result_bytes", "total_bytes",
+    "n_params", "n_results"}.
+    """
+    comps, entry = parse_module(text)
+    c = comps[entry]
+    tail = tuple(field_shape)
+
+    def field_bytes(t) -> tuple[int, int]:
+        if isinstance(t, Shape):
+            match = len(t.dims) >= len(tail) and \
+                tuple(t.dims[-len(tail):]) == tail
+            return (t.bytes, 1) if match else (0, 0)
+        pairs = [field_bytes(x) for x in t]
+        return sum(b for b, _ in pairs), sum(n for _, n in pairs)
+
+    pb = cn = 0
+    for t in c.params.values():
+        b, n = field_bytes(t)
+        pb += b
+        cn += n
+    rb = rn = 0
+    root = next((o for o in c.ops if o.is_root), None)
+    if root is not None:
+        rb, rn = field_bytes(root.out_type)
+    return {
+        "param_bytes": pb, "result_bytes": rb,
+        "total_bytes": pb + rb, "n_params": cn, "n_results": rn,
+    }
+
+
 def xla_cost_analysis(compiled) -> dict:
     """``compiled.cost_analysis()`` normalized across JAX versions —
     older releases return a one-dict-per-partition list, newer ones a

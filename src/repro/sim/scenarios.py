@@ -46,7 +46,24 @@ __all__ = [
 SITE_CHIPS = 256
 ONPREM_CHIPS = 128
 WORK = 1000.0                    # chip·s per step -> 7.8 s/step on 128
-OVERHEADS = OverheadModel(ckpt_s=5.0, provision_s=60.0, restart_s=15.0)
+
+#: seam model for the cross-environment halo synchronization: the shape
+#: of ``fwi.domain.halo_exchange_plan(FWIConfig(), 4, k=4)`` (kept as a
+#: literal so the sim layer stays jax-free) with a pessimistic 150 ms
+#: cross-DCI ppermute.  ``with_overlapped_seam`` charges only the
+#: residue the overlap-and-fuse engine cannot hide behind the stripe
+#: interior (DESIGN.md §13) — at fleet step times the seam is fully
+#: hidden, which is exactly what the BurstPlanner should believe.
+SEAM_PLAN = {
+    "k": 4, "steps_per_exchange": 4, "ppermutes_per_exchange": 2,
+    "ppermutes_per_step": 0.5, "overlap_fraction": 0.758,
+}
+OVERHEADS = OverheadModel(
+    ckpt_s=5.0, provision_s=60.0, restart_s=15.0
+).with_overlapped_seam(
+    SEAM_PLAN, ppermute_latency_s=0.15,
+    compute_s_per_step=WORK / SITE_CHIPS,
+)
 CLOUD = CloudProvider(
     legal_slices=(16, 32, 64, 128, 256),
     provision_delay_s=60.0,
