@@ -1,0 +1,195 @@
+"""Sim-vs-real validation of the elastic loop (DESIGN.md §14).
+
+Closes the loop the ROADMAP asked for: the SAME deadline-squeeze
+scenario runs through (a) the FleetSim discrete-event world driving
+SimSession and (b) the real ElasticOrchestrator driving FWISession
+(real wavefield compute; platform-model clock), both under the `plan`
+policy, and the rows report predicted-vs-actual hit / cloud-$ /
+scale-overhead.  A second bracket scores cost-aware vs cost-blind
+planning (BurstPlanner.cost_weight) in both worlds on the superlinear
+scaling story:
+
+  real_elastic.costaware_cheaper_at_equal_hit   fleet world — the
+      cost-aware planner buys the SAME deadline hit-rate for strictly
+      fewer cloud $ than the deadline-first minimal-slice solve
+  real_elastic.real_costaware_no_worse          real world — under
+      sustained congestion the cost-aware slice hits a deadline the
+      under-escalating cost-blind solve misses
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (
+    BurstPlanner,
+    DeadlinePredictor,
+    ElasticOrchestrator,
+    LogCapacityModel,
+    OverheadModel,
+    PodSpec,
+    Resources,
+)
+from repro.fwi.driver import (
+    TimeModel,
+    elastic_stripes_for,
+    fwi_session_factory,
+)
+from repro.fwi.solver import FWIConfig
+from repro.sim import FleetSim, PlanAutoscaler, superlinear_cache
+from repro.sim.fleet import CloudProvider, JobSpec
+from repro.sim.scenarios import Scenario
+
+#: shared world constants for the squeeze scenario — one knob set so
+#: the two worlds stay comparable (DESIGN.md §14 boundary table)
+LEGAL = (16, 32, 64, 128)
+ONPREM = 64
+W = 64.0                       # chip·s per step -> 1.0 s/step on-prem
+K = 1.4
+PRICE = 3.0
+STEPS = 120
+DEADLINE0, SQUEEZED = 400.0, 105.0
+OV = OverheadModel(ckpt_s=5.0, provision_s=10.0, restart_s=5.0)
+CFG = FWIConfig(nz=48, nx=96, timesteps=STEPS, n_shots=1, sponge_width=8)
+
+
+def _planner(alpha: float = 1.0, cost_weight: float = 0.5):
+    cs = sorted(set(LEGAL) | {ONPREM})
+    return BurstPlanner(
+        cluster_model=LogCapacityModel.fit(
+            cs, [W * ONPREM ** (alpha - 1.0) / c ** alpha for c in cs]
+        ),
+        cloud_model=LogCapacityModel.fit(
+            cs, [K * W * ONPREM ** (alpha - 1.0) / c ** alpha for c in cs]
+        ),
+        chips_cluster=ONPREM, legal_slices=list(LEGAL), overheads=OV,
+        price_per_chip_hour=PRICE, cost_weight=cost_weight,
+    )
+
+
+def _real_run(*, tm: TimeModel, deadline_changes=(), alpha: float = 1.0,
+              cost_weight: float = 0.5, deadline: float = DEADLINE0):
+    """One policy-driven FWISession run on the real orchestrator."""
+    import jax
+
+    n_grown = 2 if len(jax.devices()) > 1 else 1
+    orch = ElasticOrchestrator(
+        planner=_planner(alpha, cost_weight),
+        predictor=DeadlinePredictor(deadline),
+        check_every=8, ckpt_every=40, eval_interval_s=7.0,
+        cloud_slowdown=K,
+    )
+    return orch.run(
+        session_factory=fwi_session_factory(
+            CFG, tm, stripes_for=elastic_stripes_for(1, n_grown),
+            exchange_interval=4, scan_block=8,
+        ),
+        initial=Resources(pods=[PodSpec(chips=ONPREM, name="cluster")],
+                          shares=[1.0]),
+        steps_total=STEPS,
+        autoscaler=PlanAutoscaler(),
+        deadline_changes=deadline_changes,
+    )
+
+
+def _squeeze_mirror() -> Scenario:
+    """The real squeeze scenario, expressed as a 1-job fleet world."""
+    return Scenario(
+        name="squeeze_mirror",
+        jobs=(JobSpec(name="job0", arrival_s=0.0, steps_total=STEPS,
+                      deadline_s=DEADLINE0, chip_seconds_per_step=W,
+                      onprem_chips=ONPREM),),
+        deadline_changes=((20.0, "job0", SQUEEZED),
+                          (60.0, "job0", DEADLINE0)),
+        site_chips=ONPREM,
+        cloud=CloudProvider(legal_slices=LEGAL, provision_delay_s=10.0,
+                            price_per_chip_hour=PRICE, slowdown=K),
+        overheads=OV, eval_interval_s=7.0, ckpt_every=40,
+        planner_cost_weight=0.5,
+    )
+
+
+def _scale_kinds(events):
+    return [e.detail["kind"] for e in events if e.kind == "scale"]
+
+
+def run() -> list[str]:
+    rows: list[str] = []
+    t0 = time.perf_counter()
+
+    # --- the same squeeze through both worlds -------------------------
+    real = _real_run(
+        tm=TimeModel(chip_seconds_per_step=W, jitter=0.01),
+        deadline_changes=[(20.0, SQUEEZED), (60.0, DEADLINE0)],
+    )
+    kinds = _scale_kinds(real.events)
+    real_ov = sum(e.detail["overhead_s"] for e in real.events
+                  if e.kind == "scale")
+    sim = FleetSim(_squeeze_mirror(), PlanAutoscaler, seed=0).run()
+    sj = sim.jobs[0]
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(
+        f"real_elastic.real_squeeze,{us:.0f},"
+        f"hit={int(real.met_deadline)};cost={real.cloud_cost_usd:.2f};"
+        f"elapsed_s={real.elapsed_s:.0f};overhead_s={real_ov:.0f};"
+        f"grows={kinds.count('grow')};retires={kinds.count('retire')}"
+    )
+    rows.append(
+        f"real_elastic.sim_squeeze,{us:.0f},"
+        f"hit={sim.hit_rate:.2f};cost={sim.cloud_cost:.2f};"
+        f"elapsed_s={sj.elapsed_s:.0f};overhead_s={sj.overhead_s:.0f}"
+    )
+    rows.append(
+        f"real_elastic.sim_vs_real,{us:.0f},"
+        f"hit_match={int(int(real.met_deadline) == int(sim.hit_rate))};"
+        f"cost_ratio={real.cloud_cost_usd / max(sim.cloud_cost, 1e-9):.2f};"
+        f"elapsed_ratio={real.elapsed_s / max(sj.elapsed_s, 1e-9):.2f}"
+    )
+
+    # --- cost-aware vs cost-blind, fleet world ------------------------
+    aware = FleetSim(superlinear_cache(0), PlanAutoscaler, seed=0).run()
+    blind = FleetSim(
+        superlinear_cache(0, cost_weight=0.0), PlanAutoscaler, seed=0
+    ).run()
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(
+        f"real_elastic.superlinear_sim_aware,{us:.0f},"
+        f"hit={aware.hit_rate:.2f};cost={aware.cloud_cost:.2f}"
+    )
+    rows.append(
+        f"real_elastic.superlinear_sim_blind,{us:.0f},"
+        f"hit={blind.hit_rate:.2f};cost={blind.cloud_cost:.2f}"
+    )
+    rows.append(
+        f"real_elastic.costaware_cheaper_at_equal_hit,{us:.0f},"
+        f"{int(aware.hit_rate == blind.hit_rate and aware.cloud_cost < blind.cloud_cost)}"
+    )
+
+    # --- cost-aware vs cost-blind, real world -------------------------
+    # sustained congestion on the superlinear law: the cost-blind
+    # minimal-slice solve under-escalates (each resize sizes for the
+    # calibrated estimate of the moment) and misses the deadline the
+    # cost-aware slice hits
+    alpha = 1.3
+    w_sup = W * ONPREM ** (alpha - 1.0)
+    tm = TimeModel(chip_seconds_per_step=w_sup, scaling_alpha=alpha,
+                   congestion_from=5, congestion_factor=2.0, jitter=0.01)
+    r_aware = _real_run(tm=tm, alpha=alpha, cost_weight=0.6,
+                        deadline=225.0)
+    r_blind = _real_run(tm=tm, alpha=alpha, cost_weight=0.0,
+                        deadline=225.0)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(
+        f"real_elastic.superlinear_real_aware,{us:.0f},"
+        f"hit={int(r_aware.met_deadline)};cost={r_aware.cloud_cost_usd:.2f};"
+        f"elapsed_s={r_aware.elapsed_s:.0f}"
+    )
+    rows.append(
+        f"real_elastic.superlinear_real_blind,{us:.0f},"
+        f"hit={int(r_blind.met_deadline)};cost={r_blind.cloud_cost_usd:.2f};"
+        f"elapsed_s={r_blind.elapsed_s:.0f}"
+    )
+    rows.append(
+        f"real_elastic.real_costaware_no_worse,{us:.0f},"
+        f"{int(r_aware.met_deadline >= r_blind.met_deadline)}"
+    )
+    return rows

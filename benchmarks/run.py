@@ -12,6 +12,10 @@
                           loop; HBM launch-boundary proxy
   bench_fleet_scenarios — autoscaler policy suite × fleet scenarios
                           (hit-rate / cloud cost / useful-work frac)
+  bench_real_elastic    — sim-vs-real elastic loop: the same squeeze
+                          scenario through FleetSim and the real
+                          orchestrator+FWISession; cost-aware vs
+                          cost-blind planning brackets
 
 Usage:
   python benchmarks/run.py [--only a,b,...] [--json PATH]
@@ -49,6 +53,7 @@ from benchmarks import (  # noqa: E402
     bench_gamma_fit,
     bench_kernels,
     bench_overheads,
+    bench_real_elastic,
     bench_roofline,
 )
 
@@ -58,6 +63,7 @@ BENCHES = [
     ("gamma_fit", bench_gamma_fit),
     ("burst_deadline", bench_burst_deadline),
     ("fleet_scenarios", bench_fleet_scenarios),
+    ("real_elastic", bench_real_elastic),
     ("overheads", bench_overheads),
     ("kernels", bench_kernels),
     ("fused_scan", bench_fused_scan),

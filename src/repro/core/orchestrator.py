@@ -14,18 +14,35 @@ straggling triggers a γ rebalance using freshly measured throughputs.
 
 Beyond the paper's one-shot burst (its §4 names "scaling down" as future
 work), the loop can be driven by an external *autoscaler policy* that is
-consulted on the same fixed check interval and answers with a
-ScaleAction — GROW the elastic pod to a target slice, SHRINK it to a
-smaller one, RETIRE it entirely, or HOLD.  Every transition goes through
-the identical CHECKPOINT → REMESH → RESHARD → RESUME path as the paper's
+consulted on a fixed check interval and answers with a ScaleAction —
+GROW the elastic pod to a target slice, SHRINK it to a smaller one,
+RETIRE it entirely, or HOLD.  Every transition goes through the
+identical CHECKPOINT → REMESH → RESHARD → RESUME path as the paper's
 burst, so growing and shrinking are symmetric and checkpoint/restore
 invariants hold across both (DESIGN.md §8, §11).
+
+Real-session elastic loop (DESIGN.md §14): the policy-driven mode is the
+same machinery the fleet simulator evaluates, pointed at a *real*
+Session (FWISession) —
+
+  * ``eval_interval_s`` evaluates the policy on the session's clock
+    (the elapsed time the monitor integrates) instead of a step count,
+    matching the fleet's fixed-interval evaluation semantics;
+  * ``deadline_changes`` applies mid-run deadline tightenings /
+    relaxations first-class (paper §2: the deadline "could also change
+    dynamically"), recorded into the predictor's history;
+  * ``cloud_slowdown`` is the provider's *true* K stamped onto grown
+    pods regardless of what the policy believed when sizing — the same
+    sim-vs-real boundary the fleet's provision handler enforces;
+  * elastic chip-seconds actually held are metered (``cloud_chip_s``)
+    and priced through the planner's ``price_per_chip_hour``, so a real
+    run reports the same hit-rate/cost/overhead axes as a FleetSim run.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Protocol
+from typing import Any, Callable, Protocol, Sequence
 
 from repro.core.allocator import (
     HeterogeneousPlan,
@@ -138,6 +155,8 @@ class RunRecord:
     events: list[OrchestratorEvent]
     step_times: list[float]
     final_resources: Resources | None = None
+    cloud_chip_s: float = 0.0            # elastic chip-seconds held
+    cloud_cost_usd: float = 0.0          # priced via planner ($/chip-h)
 
 
 SessionFactory = Callable[[Resources, int, Any], Session]
@@ -154,6 +173,8 @@ class ElasticOrchestrator:
         ckpt_every: int = 50,
         max_bursts: int = 2,
         rebalance_straggler_rate: float = 0.2,
+        eval_interval_s: float | None = None,
+        cloud_slowdown: float | None = None,
     ):
         self.planner = planner
         self.predictor = predictor
@@ -162,6 +183,18 @@ class ElasticOrchestrator:
         self.ckpt_every = ckpt_every
         self.max_bursts = max_bursts
         self.rebalance_straggler_rate = rebalance_straggler_rate
+        #: evaluate decisions on the session clock every this many
+        #: seconds instead of every ``check_every`` steps (fleet-style
+        #: fixed-interval evaluation for real sessions, DESIGN.md §14)
+        if eval_interval_s is not None and eval_interval_s <= 0:
+            raise ValueError(
+                f"eval_interval_s must be positive, got {eval_interval_s}"
+            )
+        self.eval_interval_s = eval_interval_s
+        #: the provider's true K for grown pods — overrides whatever the
+        #: policy believed when sizing (the sim-vs-real boundary the
+        #: fleet's provision handler enforces, DESIGN.md §10)
+        self.cloud_slowdown = cloud_slowdown
 
     # ---- the γ-split applied to resources --------------------------------
 
@@ -234,16 +267,21 @@ class ElasticOrchestrator:
         steps_total: int,
         overhead_s_fn: Callable[[BurstDecision], float] | None = None,
         autoscaler: AutoscalerPolicy | None = None,
+        deadline_changes: Sequence[tuple[float, float]] = (),
     ) -> RunRecord:
         res = initial
         session = session_factory(res, 0, None)
         elapsed = 0.0
+        cloud_chip_s = 0.0
         events: list[OrchestratorEvent] = []
         step_times: list[float] = []
         bursts_done = 0
         last_ckpt: Any = None
         last_ckpt_step = -1
         step = 0
+        dl_sched = sorted(deadline_changes)
+        dl_idx = 0
+        next_eval = self.eval_interval_s or 0.0
         while step < steps_total:
             try:
                 dt = session.run_step(step)
@@ -262,21 +300,44 @@ class ElasticOrchestrator:
                 )
                 restart = max(last_ckpt_step + 1, 0)
                 elapsed += self.planner.overheads.restart_s
+                cloud_chip_s += (
+                    elastic_chips(res) * self.planner.overheads.restart_s
+                )
                 session = session_factory(res, restart, last_ckpt)
                 self.monitor.reset_window()
                 step = restart
                 continue
             self.monitor.observe(dt)
             elapsed += dt
+            cloud_chip_s += elastic_chips(res) * dt
             step_times.append(dt)
             step += 1
+
+            # first-class dynamic deadlines (paper §2), recorded into
+            # the predictor history at the session-clock time they land
+            while dl_idx < len(dl_sched) and elapsed >= dl_sched[dl_idx][0]:
+                self.predictor.set_deadline(
+                    dl_sched[dl_idx][1], at_s=elapsed
+                )
+                events.append(OrchestratorEvent(
+                    step, "deadline",
+                    {"deadline_s": dl_sched[dl_idx][1],
+                     "at_elapsed_s": elapsed},
+                ))
+                dl_idx += 1
 
             if step % self.ckpt_every == 0:
                 last_ckpt = session.checkpoint(step)
                 last_ckpt_step = step
                 events.append(OrchestratorEvent(step, "ckpt", {}))
 
-            if step % self.check_every or step >= steps_total:
+            if self.eval_interval_s is not None:
+                # wall-clock-driven evaluation on the session's clock
+                if elapsed < next_eval or step >= steps_total:
+                    continue
+                while next_eval <= elapsed:
+                    next_eval += self.eval_interval_s
+            elif step % self.check_every or step >= steps_total:
                 continue
 
             est = self.predictor.estimate(
@@ -294,6 +355,15 @@ class ElasticOrchestrator:
                     planner=self.planner, monitor=self.monitor,
                     legal=list(self.planner.legal),
                 ))
+                if (
+                    action.kind == "grow"
+                    and self.cloud_slowdown is not None
+                ):
+                    # the pod's *true* K is the provider's, whatever the
+                    # policy believed when sizing (DESIGN.md §10)
+                    action = dataclasses.replace(
+                        action, slowdown=self.cloud_slowdown
+                    )
                 new_res = self.apply_scale(res, action)
                 if action.kind != "hold" and new_res.pods != res.pods:
                     last_ckpt = session.checkpoint(step)
@@ -305,6 +375,15 @@ class ElasticOrchestrator:
                     )
                     elapsed += overhead
                     res = new_res
+                    # provisioning is not billed (the provider's clock
+                    # starts at attach, as in the fleet); the ckpt +
+                    # restart legs hold the new allocation
+                    cloud_chip_s += elastic_chips(res) * max(
+                        overhead
+                        - (ov.provision_s if action.kind == "grow"
+                           else 0.0),
+                        0.0,
+                    )
                     session = session_factory(res, step, last_ckpt)
                     self.monitor.reset_window()
                     events.append(OrchestratorEvent(
@@ -334,6 +413,9 @@ class ElasticOrchestrator:
                 elapsed += overhead
                 # steps 3,4: expand resources with the γ split
                 res = self.apply_burst(res, decision)
+                cloud_chip_s += elastic_chips(res) * max(
+                    overhead - self.planner.overheads.provision_s, 0.0
+                )
                 # steps 6,7: assimilate state, restart at the stopped step
                 session = session_factory(res, step, last_ckpt)
                 self.monitor.reset_window()
@@ -371,4 +453,6 @@ class ElasticOrchestrator:
             events=events,
             step_times=step_times,
             final_resources=res,
+            cloud_chip_s=cloud_chip_s,
+            cloud_cost_usd=self.planner.cost_usd(cloud_chip_s),
         )

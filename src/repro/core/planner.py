@@ -14,6 +14,23 @@ inequality accounts for the burst overhead explicitly —
   T_after = T_ckpt + T_provision + T_transfer + T_restart
             + steps_remaining · t_step(after)
 and bursting is only worth it if T_after < min(T_stay, deadline).
+
+Cost-aware sizing (DESIGN.md §14; SLA/cost placement in the spirit of
+arXiv:1507.05472): when the planner knows the provider's
+``price_per_chip_hour``, the minimal-cores solve becomes the *floor* of
+a candidate sweep over legal slices.  Each candidate's projected $ is
+``price · chips · hold_s`` where ``hold_s`` is the retire-aware hold
+time (the pod is dropped as soon as the remaining work fits on-premise
+within the deadline, mirroring the `plan` policy's RETIRE rule).  The
+``cost_weight`` knob w ∈ [0, 1] sets how much of the remaining time
+budget may be spent chasing savings: a candidate is admissible only if
+its projected completion consumes at most ``w · (deadline − elapsed)``,
+so w = 0 reproduces the deadline-first minimal slice exactly and w = 1
+takes the cheapest deadline-feasible slice.  With the empirically
+fitted log-laws the cheapest slice is *not* always the smallest —
+superlinear scaling regimes (cache effects on striped stencils) make a
+larger slice finish and retire so much earlier that it bills fewer
+chip-hours.
 """
 from __future__ import annotations
 
@@ -127,6 +144,8 @@ class BurstDecision:
     overhead_s: float = 0.0
     correction_K: float = 1.0
     cores_needed: float = 0.0
+    est_hold_s: float = 0.0              # projected cloud-pod hold time
+    est_cost_usd: float = 0.0            # projected $ for the hold
 
 
 class BurstPlanner:
@@ -141,6 +160,8 @@ class BurstPlanner:
         gamma_model: GammaModel | None = None,
         gamma_total: int = 0,
         max_burst_chips: int | None = None,
+        price_per_chip_hour: float = 0.0,
+        cost_weight: float = 0.0,
     ):
         self.cluster_model = cluster_model
         self.cloud_model = cloud_model
@@ -152,6 +173,75 @@ class BurstPlanner:
         self.max_burst_chips = (
             max(self.legal) if max_burst_chips is None else max_burst_chips
         )
+        #: provider $ per chip-hour (0 disables cost projection entirely)
+        self.price_per_chip_hour = price_per_chip_hour
+        #: cost/deadline trade-off knob w ∈ [0, 1] (module docstring):
+        #: 0 = deadline-first minimal slice, 1 = cheapest feasible slice
+        self.cost_weight = min(max(cost_weight, 0.0), 1.0)
+
+    def cost_usd(self, chip_seconds: float) -> float:
+        return chip_seconds / 3600.0 * self.price_per_chip_hour
+
+    # ---- cost-aware sizing (DESIGN.md §14) ---------------------------
+
+    def _burst_hold_s(
+        self, chips: int, K: float, cluster_model: LogCapacityModel,
+        steps_rem: int, budget_s: float,
+    ) -> float:
+        """Retire-aware hold-time projection for a candidate slice.
+
+        The `plan` policy drops the pod once the remaining steps fit
+        on-premise within the deadline; with per-step times t_burst
+        (combined) and t_on (on-premise alone), the pod must be held
+        until the accumulated head-start covers the on-premise deficit:
+
+            hold = (steps_rem · t_on − budget) / (t_on / t_burst − 1)
+
+        clamped to [0, steps_rem · t_burst] (never longer than running
+        the whole remainder on the combined fleet)."""
+        t_burst = self._post_burst_step_time(chips, K, cluster_model)
+        t_on = cluster_model.predict_time(self.chips_cluster)
+        full = steps_rem * t_burst
+        if t_on <= t_burst:
+            return full
+        deficit = steps_rem * t_on - budget_s
+        hold = deficit / (t_on / t_burst - 1.0)
+        return min(max(hold, 0.0), full)
+
+    def _cost_aware_choice(
+        self, chips_min: int, K: float,
+        cluster_model: LogCapacityModel, est: DeadlineEstimate,
+        steps_rem: int, overhead_s: float,
+    ) -> tuple[int, float, float]:
+        """Pick the cheapest admissible legal slice ≥ the deadline-first
+        solve; returns (chips, hold_s, cost_usd).  Admissibility: the
+        candidate's projected completion must consume at most
+        ``cost_weight · (deadline − elapsed)`` of the remaining time —
+        when slack is tight no candidate qualifies and the deadline-first
+        slice stands (with its own cost projection attached)."""
+        budget_s = est.deadline_s - est.elapsed_s - overhead_s
+        spendable = self.cost_weight * (est.deadline_s - est.elapsed_s)
+        best = None
+        for s in sorted(self.legal):
+            if s < chips_min or s > self.max_burst_chips:
+                continue
+            t_after = steps_rem * self._post_burst_step_time(
+                s, K, cluster_model
+            )
+            hold = self._burst_hold_s(
+                s, K, cluster_model, steps_rem, budget_s
+            )
+            dollars = self.cost_usd(s * hold)
+            if overhead_s + t_after > spendable:
+                continue                    # too close to the deadline
+            if best is None or dollars < best[2] * (1.0 - 1e-9):
+                best = (s, hold, dollars)
+        if best is None:                    # slack too tight: deadline-first
+            hold = self._burst_hold_s(
+                chips_min, K, cluster_model, steps_rem, budget_s
+            )
+            return chips_min, hold, self.cost_usd(chips_min * hold)
+        return best
 
     def calibrated_cluster_model(
         self, observed_step_s: float | None, effective_chips: float | None,
@@ -218,6 +308,27 @@ class BurstPlanner:
                 est_time_stay_s=est.estimated_total_s,
                 cores_needed=cores_needed, correction_K=K,
             )
+        # --- cost-aware slice selection (DESIGN.md §14) ----------------
+        hold_s = cost_usd = 0.0
+        reason = "deadline at risk; bursting"
+        if self.price_per_chip_hour > 0:
+            if self.cost_weight > 0:
+                chosen, hold_s, cost_usd = self._cost_aware_choice(
+                    chips, K, cluster_model, est, steps_rem, overhead
+                )
+                if chosen != chips:
+                    reason = (
+                        f"deadline at risk; bursting {chosen} chips "
+                        f"(cost-aware over minimal {chips}: "
+                        f"${cost_usd:.2f} projected)"
+                    )
+                    chips = chosen
+            else:
+                hold_s = self._burst_hold_s(
+                    chips, K, cluster_model, steps_rem,
+                    est.deadline_s - est.elapsed_s - overhead,
+                )
+                cost_usd = self.cost_usd(chips * hold_s)
         # --- paper step 4: domain split γ ------------------------------
         # time the on-premise side may spend per step after the split
         gamma = 0
@@ -247,7 +358,7 @@ class BurstPlanner:
             )
         return BurstDecision(
             True,
-            "deadline at risk; bursting",
+            reason,
             chips_burst=chips,
             gamma=gamma,
             gamma_total=self.gamma_total,
@@ -256,6 +367,8 @@ class BurstPlanner:
             overhead_s=overhead,
             correction_K=K,
             cores_needed=cores_needed,
+            est_hold_s=hold_s,
+            est_cost_usd=cost_usd,
         )
 
     def _post_burst_step_time(

@@ -20,6 +20,13 @@ from repro.core.orchestrator import PodFailure, Resources
 class SimWorkload:
     chip_seconds_per_step: float      # total work per step (chip·s)
     jitter: float = 0.02
+    #: per-pod rate law exponent: a pod of c chips advances its share at
+    #: rate ∝ c**alpha / K.  alpha = 1 is the work-conserving default;
+    #: alpha > 1 models the superlinear regimes striped stencils hit
+    #: when smaller per-device domains become cache-resident — the
+    #: regime where the cost-aware planner's larger-but-cheaper slices
+    #: are real (DESIGN.md §14).
+    scaling_alpha: float = 1.0
 
 
 class SimSession:
@@ -64,7 +71,8 @@ class SimSession:
         ):
             if share <= 0:
                 continue
-            t = self.w.chip_seconds_per_step * share / pod.chips
+            t = (self.w.chip_seconds_per_step * share
+                 / pod.chips ** self.w.scaling_alpha)
             t *= pod.slowdown
             for wdw in self.windows.get(i, []):
                 if wdw.start_step <= step < wdw.end_step:

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.orchestrator import Resources, Session
+from repro.core.orchestrator import Resources, Session, elastic_chips
 from repro.fwi.domain import (
     effective_block,
     make_sharded_scan_runner,
@@ -54,6 +54,10 @@ class TimeModel:
     congestion_from: int = 0
     congestion_factor: float = 1.0
     jitter: float = 0.01
+    #: platform-model rate-law exponent (t ∝ 1/chips**alpha), matching
+    #: SimWorkload.scaling_alpha so the sim-vs-real harness can run the
+    #: same scenario through both worlds (DESIGN.md §14)
+    scaling_alpha: float = 1.0
 
 
 class FWISession(Session):
@@ -120,6 +124,24 @@ class FWISession(Session):
             if restored is not None else 0
         self._amortized = float(restored.get("amortized_s", 0.0)) \
             if restored is not None else 0.0
+        # fleet signature of the Resources the amortized step time was
+        # measured under; a RESHARD onto a different fleet must not feed
+        # the predictor the OLD fleet's step time, so a mismatch
+        # rescales the estimate by the modeled effective-throughput
+        # ratio until the next dispatched block re-measures it
+        self._n_stripes = n
+        self._res_sig = (
+            n, tuple((p.chips, round(p.slowdown, 9)) for p in res.pods)
+        )
+        self._eff = sum(
+            p.chips / max(p.slowdown, 1e-9) for p in res.pods
+        )
+        if restored is not None and self._amortized > 0.0:
+            old_sig = restored.get("res_sig")
+            old_eff = float(restored.get("amortized_eff", 0.0))
+            if (old_sig is not None and old_sig != self._res_sig
+                    and old_eff > 0.0 and self._eff > 0.0):
+                self._amortized *= old_eff / self._eff
 
     def _advance_block(self) -> float:
         """Dispatch one scan block; returns amortized wall s/step."""
@@ -145,7 +167,8 @@ class FWISession(Session):
                 if share <= 0:
                     continue
                 t = (self.tm.chip_seconds_per_step * share
-                     / pod.chips * pod.slowdown)
+                     / pod.chips ** self.tm.scaling_alpha
+                     * pod.slowdown)
                 if (pod.name == "cluster"
                         and self.tm.congestion_from <= step
                         < self.tm.congestion_until):
@@ -170,7 +193,22 @@ class FWISession(Session):
             "t": self.t,
             "pending": self._pending,
             "amortized_s": self._amortized,
+            "res_sig": self._res_sig,
+            "amortized_eff": self._eff,
         }
+
+
+def elastic_stripes_for(base_stripes: int = 1, grown_stripes: int = 2):
+    """``stripes_for`` mapping for the real elastic loop (DESIGN.md
+    §14): while an elastic (cloud/burst) pod is attached the domain is
+    re-striped across ``grown_stripes`` devices, and a RETIRE collapses
+    it back — so every policy-driven GROW/SHRINK exercises the real
+    ckpt → remesh → reshard path, not just a share re-split."""
+
+    def stripes(res: Resources) -> int:
+        return grown_stripes if elastic_chips(res) > 0 else base_stripes
+
+    return stripes
 
 
 def fwi_session_factory(cfg: FWIConfig, time_model: TimeModel,

@@ -17,7 +17,11 @@ from repro.sim.fleet import (
     JobSpec,
     Site,
 )
-from repro.sim.scenarios import Scenario, default_scenarios
+from repro.sim.scenarios import (
+    Scenario,
+    default_scenarios,
+    superlinear_cache,
+)
 
 __all__ = [
     "AlwaysBurstAutoscaler",
@@ -34,4 +38,5 @@ __all__ = [
     "Scenario",
     "Site",
     "default_scenarios",
+    "superlinear_cache",
 ]

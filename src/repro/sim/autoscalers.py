@@ -222,10 +222,15 @@ class PlanAutoscaler:
             effective_chips=eff_now,
         )
         if decision.burst and decision.chips_burst > ctx.cloud_chips:
+            reason = decision.reason
+            if decision.est_cost_usd > 0 and "$" not in reason:
+                # cost-aware planner (DESIGN.md §14): surface the
+                # projected bill for the sized slice in the audit trail
+                reason += f" (~${decision.est_cost_usd:.2f} projected)"
             return ScaleAction(
                 "grow", chips=decision.chips_burst,
                 slowdown=max(decision.correction_K, 1e-6),
-                reason=decision.reason,
+                reason=reason,
             )
         if ctx.cloud_chips > 0:
             cloud_pods = [
@@ -237,7 +242,15 @@ class PlanAutoscaler:
             steps_rem = max(ctx.steps_total - ctx.step, 0)
             t_now = ctx.monitor.step_time()
             if eff_onprem > 0 and t_now > 0:
-                t_onprem = t_now * eff_now / eff_onprem
+                # project the on-premise-alone step time through the
+                # *calibrated capacity model* (same curve the sizing
+                # uses), not a linear effective-chip rescale — on
+                # non-linear laws the linear rescale under-estimates and
+                # retires too eagerly, thrashing grow/retire cycles
+                cal = ctx.planner.calibrated_cluster_model(
+                    t_now, eff_now
+                )
+                t_onprem = cal.predict_time(ctx.planner.chips_cluster)
                 ov = ctx.planner.overheads
                 projected = (
                     ctx.elapsed_s + ov.ckpt_s + ov.restart_s

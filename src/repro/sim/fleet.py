@@ -73,6 +73,10 @@ class JobSpec:
     chip_seconds_per_step: float      # work per step (chip·s)
     onprem_chips: int
     jitter: float = 0.01
+    #: rate-law exponent t_step ∝ 1 / chips**alpha (SimWorkload docs);
+    #: the per-job capacity models are fitted on the same law, so the
+    #: paper's pre-processing fit stays exact
+    scaling_alpha: float = 1.0
 
 
 class Site:
@@ -219,7 +223,8 @@ class FleetSim:
             return 1.0
 
         return SimSession(
-            SimWorkload(jrt.spec.chip_seconds_per_step, jrt.spec.jitter),
+            SimWorkload(jrt.spec.chip_seconds_per_step, jrt.spec.jitter,
+                        scaling_alpha=jrt.spec.scaling_alpha),
             jrt.res, start_step, restored,
             rng=jrt.rng,
             extra_slowdown=contention_slowdown,
@@ -240,15 +245,18 @@ class FleetSim:
         cs = sorted(set(self.cloud.legal_slices)
                     | {spec.onprem_chips})
         w = spec.chip_seconds_per_step
+        a = spec.scaling_alpha
         jrt.planner = BurstPlanner(
             cluster_model=LogCapacityModel.fit(
-                cs, [w / c for c in cs], name="site"),
+                cs, [w / c ** a for c in cs], name="site"),
             cloud_model=LogCapacityModel.fit(
-                cs, [self.cloud.slowdown * w / c for c in cs],
+                cs, [self.cloud.slowdown * w / c ** a for c in cs],
                 name="cloud"),
             chips_cluster=spec.onprem_chips,
             legal_slices=self.cloud.legal_slices,
             overheads=self.sc.overheads,
+            price_per_chip_hour=self.cloud.price_per_chip_hour,
+            cost_weight=self.sc.planner_cost_weight,
         )
         self.site.attach(spec.name, spec.onprem_chips)
         jrt.session = self._make_session(jrt, 0, None)
@@ -398,7 +406,17 @@ class FleetSim:
             action = jrt.policy.decide(ctx)
             if action.kind == "grow":
                 target = max(action.chips, 0)
-                if target > max(jrt.cloud_chips, jrt.pending_target):
+                # chips already staged for the next step boundary count
+                # as held — otherwise the window between
+                # provision-complete and attach double-requests (and
+                # double-pays) the same slice
+                staged = (
+                    jrt.pending_action.chips
+                    if (jrt.pending_action is not None
+                        and jrt.pending_action.kind == "grow") else 0
+                )
+                if target > max(jrt.cloud_chips, jrt.pending_target,
+                                staged):
                     jrt.pending_target = target
                     self._push(
                         self.now + self.cloud.provision_delay_s,
@@ -484,7 +502,7 @@ class FleetSim:
             elif kind == "deadline":
                 jrt = self._by_name(payload[0])
                 if jrt is not None and not jrt.finished:
-                    jrt.predictor.set_deadline(payload[1])
+                    jrt.predictor.set_deadline(payload[1], at_s=self.now)
                     jrt.events.append((self.now, "deadline_change", {
                         "new_deadline_s": payload[1],
                     }))
@@ -501,23 +519,41 @@ class FleetSim:
         useful = 0.0
         consumed = 0.0
         for jrt in self.jobs:
-            elapsed = jrt.finish_s - jrt.spec.arrival_s
-            met = jrt.finished and elapsed <= jrt.predictor.deadline_s
-            cost = self.cloud.cost(jrt.cloud_chip_s)
+            # unfinished jobs report elapsed-so-far (now − arrival), not
+            # a garbage negative interval from an unset finish_s
+            end = jrt.finish_s if jrt.finished else self.now
+            elapsed = (
+                max(end - jrt.spec.arrival_s, 0.0) if jrt.arrived else 0.0
+            )
+            # judge against the deadline in force when the job finished
+            # (deadline_changes applied later must not retro-tighten)
+            deadline = jrt.predictor.deadline_at(end)
+            met = jrt.finished and elapsed <= deadline
+            # a mid-run snapshot must include the chip-seconds accrued
+            # on a currently-held pod that _bill_cloud has not yet
+            # flushed (it only runs at scale/finish/rollback events)
+            cloud_s = jrt.cloud_chip_s
+            if not jrt.finished and jrt.arrived and jrt.cloud_chips > 0:
+                cloud_s += jrt.cloud_chips * max(
+                    self.now - jrt.cloud_since, 0.0
+                )
+            cost = self.cloud.cost(cloud_s)
             jobs.append(JobRecord(
                 name=jrt.spec.name, finished=jrt.finished,
                 finish_s=jrt.finish_s, elapsed_s=elapsed,
-                deadline_s=jrt.predictor.deadline_s, met_deadline=met,
+                deadline_s=deadline, met_deadline=met,
                 steps_total=jrt.spec.steps_total,
-                cloud_chip_s=jrt.cloud_chip_s, cloud_cost=cost,
+                cloud_chip_s=cloud_s, cloud_cost=cost,
                 overhead_s=jrt.overhead_s, rollbacks=jrt.rollbacks,
                 events=jrt.events,
             ))
-            useful += jrt.steps_done * jrt.spec.chip_seconds_per_step
-            consumed += (
-                jrt.spec.onprem_chips * max(elapsed, 0.0)
-                + jrt.cloud_chip_s
+            # useful chip·s per step at the on-premise operating point
+            # of the job's rate law (== chip_seconds_per_step at α = 1)
+            useful += jrt.steps_done * (
+                jrt.spec.chip_seconds_per_step
+                / jrt.spec.onprem_chips ** (jrt.spec.scaling_alpha - 1.0)
             )
+            consumed += jrt.spec.onprem_chips * elapsed + cloud_s
         done = [j for j in jobs]
         return FleetRecord(
             scenario=self.sc.name,
@@ -528,7 +564,9 @@ class FleetSim:
                 if done else 0.0
             ),
             cloud_cost=sum(j.cloud_cost for j in jobs),
-            useful_frac=useful / consumed if consumed > 0 else 0.0,
+            useful_frac=(
+                min(useful / consumed, 1.0) if consumed > 0 else 0.0
+            ),
             cloud_timeline=self.cloud_timeline,
             makespan_s=max(
                 (j.finish_s for j in jobs if j.finished), default=0.0

@@ -16,6 +16,9 @@ the rest generalize it:
   spot_market       overload on spot-priced cloud chips that get
                     reclaimed mid-run
   node_failures     on-premise nodes die; jobs fall back to checkpoints
+  superlinear_cache overload on a cache-superlinear workload — the
+                    regime where cost-aware slice sizing (DESIGN.md
+                    §14) buys the same hit-rate for fewer cloud $
 
 All sizes are in simulated seconds/chips; a full policy×scenario sweep
 runs in well under a minute of wall time on CPU.
@@ -39,6 +42,7 @@ __all__ = [
     "overload_ramp",
     "poisson_background",
     "spot_market",
+    "superlinear_cache",
     "transient_spike",
 ]
 
@@ -85,6 +89,9 @@ class Scenario:
     eval_interval_s: float = 30.0
     ckpt_every: int = 25
     description: str = ""
+    #: BurstPlanner cost/deadline trade-off knob (DESIGN.md §14);
+    #: 0 keeps the deadline-first minimal-slice solve
+    planner_cost_weight: float = 0.0
 
 
 def _jobs(n: int, *, steps: int, deadline_s: float,
@@ -210,6 +217,36 @@ def node_failures(seed: int = 0) -> Scenario:
     )
 
 
+def superlinear_cache(seed: int = 0,
+                      cost_weight: float = 0.6) -> Scenario:
+    """Overload on a cache-superlinear workload (t ∝ 1/c^1.3): striped
+    stencils whose per-device domains go cache-resident speed up faster
+    than linearly, so a larger slice finishes and retires early enough
+    to bill *fewer* chip-hours — the regime where the cost-aware
+    planner's larger-but-cheaper choice is real (DESIGN.md §14).  Run
+    with ``cost_weight=0`` for the cost-blind bracket."""
+    alpha = 1.3
+    # normalize W so the on-premise step time matches the other
+    # scenarios (7.8 s/step on 128 chips) despite the steeper law
+    work = WORK * float(ONPREM_CHIPS ** (alpha - 1.0))
+    jobs = tuple(
+        dataclasses.replace(j, chip_seconds_per_step=work,
+                            scaling_alpha=alpha, deadline_s=2300.0)
+        for j in _jobs(2, steps=200, deadline_s=2300.0)
+    )
+    return Scenario(
+        name="superlinear_cache",
+        jobs=jobs,
+        background=(
+            BackgroundLoad(300.0, 10.0 ** 9, 192, name="ramp"),
+        ),
+        planner_cost_weight=cost_weight,
+        description="sustained overload on a superlinearly-scaling "
+                    "workload — cost-aware sizing should buy the same "
+                    "hit-rate for fewer cloud $",
+    )
+
+
 def default_scenarios(seed: int = 0) -> tuple[Scenario, ...]:
     return (
         calm(seed),
@@ -218,4 +255,5 @@ def default_scenarios(seed: int = 0) -> tuple[Scenario, ...]:
         deadline_squeeze(seed),
         spot_market(seed),
         node_failures(seed),
+        superlinear_cache(seed),
     )

@@ -35,8 +35,10 @@ from repro.sim import (
     PlanAutoscaler,
 )
 from repro.sim.scenarios import (
+    calm,
     default_scenarios,
     overload_ramp,
+    superlinear_cache,
     transient_spike,
 )
 
@@ -174,6 +176,149 @@ def test_spot_reclaims_roll_back_and_rerun_lost_steps():
     for _, d in reclaims:
         assert d["cloud_chips"] == 0      # pod really gone
     assert all(j.finished for j in rec.jobs)
+
+
+# ---------------------------------------------- accounting regressions
+
+
+def test_record_unfinished_jobs_report_elapsed_so_far():
+    """Regression: _record used finish_s − arrival_s for *unfinished*
+    jobs too — an unset finish_s made elapsed negative (silently
+    clamped into consumed) and garbage in the JobRecord."""
+    sim = FleetSim(overload_ramp(0), NoBurstAutoscaler, seed=0)
+    sim.now = 0.0
+    sim._arrive(sim.jobs[0])          # job0 running; job1 never arrived
+    sim.now = 500.0
+    rec = sim._record()
+    j0, j1 = rec.jobs
+    assert not j0.finished and not j0.met_deadline
+    assert j0.elapsed_s == 500.0      # elapsed-so-far, not -arrival_s
+    assert j1.elapsed_s == 0.0        # not the negative -60 of old
+    assert all(j.elapsed_s >= 0.0 for j in rec.jobs)
+    assert 0.0 <= rec.useful_frac <= 1.0
+
+
+def test_deadline_missing_job_has_sane_elapsed_and_accounting():
+    rec = FleetSim(overload_ramp(0), NoBurstAutoscaler, seed=0).run()
+    for j in rec.jobs:
+        assert j.finished and not j.met_deadline
+        assert j.elapsed_s > j.deadline_s > 0
+        assert j.elapsed_s == pytest.approx(
+            j.finish_s - next(
+                s.arrival_s for s in overload_ramp(0).jobs
+                if s.name == j.name
+            )
+        )
+    assert 0.0 <= rec.useful_frac <= 1.0
+
+
+def test_met_deadline_judged_against_deadline_in_force_at_finish():
+    """Regression: a deadline change landing *after* a job finished
+    must not retro-judge it — _record reads the predictor's change
+    history at finish time, not its latest value."""
+    sim = FleetSim(calm(0), NoBurstAutoscaler, seed=0)
+    rec = sim.run()
+    assert all(j.met_deadline for j in rec.jobs)
+    for jrt in sim.jobs:              # tighten AFTER every finish
+        jrt.predictor.set_deadline(1.0, at_s=sim.now + 100.0)
+    rec2 = sim._record()
+    assert [j.met_deadline for j in rec2.jobs] == \
+        [j.met_deadline for j in rec.jobs]
+    assert [j.deadline_s for j in rec2.jobs] == \
+        [j.deadline_s for j in rec.jobs]
+
+
+def test_deadline_squeeze_judged_against_tightened_deadline():
+    """Jobs running through the squeeze ARE judged against the new
+    value (the change was in force when they finished)."""
+    from repro.sim.scenarios import deadline_squeeze
+    rec = FleetSim(deadline_squeeze(0), NoBurstAutoscaler, seed=0).run()
+    for j in rec.jobs:
+        assert j.deadline_s == 2000.0  # tightened, not the 2600 start
+
+
+def test_predictor_deadline_history():
+    from repro.core import DeadlinePredictor
+    p = DeadlinePredictor(2600.0)
+    p.set_deadline(2000.0, at_s=800.0)
+    p.set_deadline(2400.0, at_s=1500.0)
+    assert p.deadline_at(700.0) == 2600.0
+    assert p.deadline_at(800.0) == 2000.0
+    assert p.deadline_at(1400.0) == 2000.0
+    assert p.deadline_at(2000.0) == 2400.0
+    assert p.deadline_s == 2400.0
+
+
+def test_predictor_untimestamped_change_is_not_retroactive():
+    """A legacy set_deadline() without at_s must govern the current
+    deadline but never be presumed to predate a finite finish time."""
+    from repro.core import DeadlinePredictor
+    p = DeadlinePredictor(100.0)
+    p.set_deadline(50.0)              # no clock available
+    assert p.deadline_s == 50.0
+    assert p.deadline_at(10.0) == 100.0
+    assert p.deadline_at(1e12) == 100.0
+
+
+def test_predictor_out_of_order_changes():
+    from repro.core import DeadlinePredictor
+    p = DeadlinePredictor(100.0)
+    p.set_deadline(50.0, at_s=900.0)
+    p.set_deadline(70.0, at_s=800.0)  # logged late, effective earlier
+    assert p.deadline_at(850.0) == 70.0
+    assert p.deadline_at(950.0) == 50.0
+    assert p.deadline_at(700.0) == 100.0
+
+
+def test_record_snapshot_includes_accrued_cloud_chip_seconds():
+    """A mid-run _record must bill the currently-held pod up to `now`,
+    not just what _bill_cloud flushed at the last scale event."""
+    sim = FleetSim(overload_ramp(0), NoBurstAutoscaler, seed=0)
+    sim.now = 0.0
+    sim._arrive(sim.jobs[0])
+    jrt = sim.jobs[0]
+    jrt.res = ElasticOrchestrator.apply_scale(
+        jrt.res, ScaleAction("grow", chips=64, slowdown=1.4)
+    )
+    jrt.cloud_since = 100.0
+    sim.now = 500.0
+    rec = sim._record()
+    assert rec.jobs[0].cloud_chip_s == pytest.approx(64 * 400.0)
+    assert rec.jobs[0].cloud_cost == pytest.approx(
+        sim.cloud.cost(64 * 400.0)
+    )
+    # the accrual is a snapshot, not a flush: runtime state untouched
+    assert jrt.cloud_chip_s == 0.0 and jrt.cloud_since == 100.0
+
+
+def test_no_duplicate_grow_in_provision_attach_window():
+    """Regression: between provision-complete and the step-boundary
+    attach, an evaluate saw cloud=0/pending=0 and re-requested (and
+    re-paid) the same slice."""
+    rec = FleetSim(superlinear_cache(0), PlanAutoscaler, seed=0).run()
+    for j in rec.jobs:
+        scales = [
+            (d["kind"], d["cloud_chips"]) for _, k, d in j.events
+            if k == "scale"
+        ]
+        for (k1, c1), (k2, c2) in zip(scales, scales[1:]):
+            assert not (k1 == k2 == "grow" and c1 == c2), scales
+
+
+def test_superlinear_cost_aware_beats_blind_at_equal_hit_rate():
+    """The §14 claim at fleet scale: on the cache-superlinear world the
+    cost-aware planner buys the same deadline hit-rate for strictly
+    fewer cloud $ than the cost-blind minimal-slice solve."""
+    aware = FleetSim(superlinear_cache(0), PlanAutoscaler, seed=0).run()
+    blind = FleetSim(
+        superlinear_cache(0, cost_weight=0.0), PlanAutoscaler, seed=0
+    ).run()
+    assert aware.hit_rate == blind.hit_rate == 1.0
+    assert aware.cloud_cost < blind.cloud_cost
+    # the aware run actually held larger slices, not just shorter ones
+    peak_aware = max(c for _, c in aware.cloud_timeline)
+    peak_blind = max(c for _, c in blind.cloud_timeline)
+    assert peak_aware > peak_blind
 
 
 # ------------------------------------- orchestrator scale transitions

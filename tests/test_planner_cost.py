@@ -1,0 +1,122 @@
+"""Cost-aware burst planning (DESIGN.md §14).
+
+Pins both sides of the cost/deadline trade-off knob: with slack to
+spend, the planner deviates from the deadline-first minimal slice to a
+larger-but-cheaper-overall one (superlinear scaling laws make a big
+slice finish and retire early enough to bill fewer chip-hours); with
+tight slack — or the knob at zero — it falls back to the deadline-first
+solve exactly.
+"""
+import pytest
+
+from repro.core import BurstPlanner, LogCapacityModel, OverheadModel
+from repro.core.deadline import DeadlineEstimate
+
+LEGAL = [16, 32, 64, 128, 256]
+ONPREM = 128
+OV = OverheadModel(ckpt_s=5, provision_s=60, restart_s=15)
+
+
+def _models(alpha: float, work: float = 4280.0, k: float = 1.4):
+    cs = sorted(set(LEGAL) | {ONPREM})
+    cluster = LogCapacityModel.fit(
+        cs, [work / c ** alpha for c in cs], name="site"
+    )
+    cloud = LogCapacityModel.fit(
+        cs, [k * work / c ** alpha for c in cs], name="cloud"
+    )
+    return cluster, cloud
+
+
+def _planner(alpha: float, cost_weight: float,
+             price: float = 3.0) -> BurstPlanner:
+    cluster, cloud = _models(alpha)
+    return BurstPlanner(
+        cluster_model=cluster, cloud_model=cloud, chips_cluster=ONPREM,
+        legal_slices=LEGAL, overheads=OV,
+        price_per_chip_hour=price, cost_weight=cost_weight,
+    )
+
+
+def _est(elapsed, deadline, t_obs, steps_done, steps_total):
+    rem = (steps_total - steps_done) * t_obs
+    total = elapsed + rem
+    return DeadlineEstimate(
+        estimated_total_s=total, elapsed_s=elapsed, remaining_s=rem,
+        deadline_s=deadline, slack_s=deadline - total,
+        will_miss=True, predictable=True,
+    )
+
+
+def _congested_plan(planner, *, elapsed=500.0, deadline=1500.0,
+                    congestion=2.0):
+    """Mid-run congestion: observed step time is `congestion`× the
+    model at the on-premise operating point."""
+    t_obs = congestion * planner.cluster_model.predict_time(ONPREM)
+    est = _est(elapsed, deadline, t_obs, 100, 200)
+    return planner.plan(est, 100, 200, observed_step_s=t_obs,
+                        effective_chips=ONPREM)
+
+
+def test_cost_aware_picks_larger_but_cheaper_slice_when_slack_allows():
+    blind = _congested_plan(_planner(1.3, cost_weight=0.0))
+    aware = _congested_plan(_planner(1.3, cost_weight=0.6))
+    assert blind.burst and aware.burst
+    # deadline-first minimal slice vs the cost-chosen larger one
+    assert aware.chips_burst > blind.chips_burst
+    assert blind.chips_burst == 64 and aware.chips_burst == 256
+    # and the larger slice is projected strictly cheaper overall:
+    # superlinear scaling retires it early enough to bill fewer chip-h
+    assert 0 < aware.est_cost_usd < blind.est_cost_usd
+    assert 0 < aware.est_hold_s < blind.est_hold_s
+    assert "cost-aware" in aware.reason and "$" in aware.reason
+
+
+def test_cost_aware_falls_back_to_deadline_first_when_slack_tight():
+    # low knob: the spendable budget w·(deadline − elapsed) admits no
+    # candidate, so the deadline-first solve stands
+    low = _congested_plan(_planner(1.3, cost_weight=0.3))
+    blind = _congested_plan(_planner(1.3, cost_weight=0.0))
+    assert low.chips_burst == blind.chips_burst == 64
+    assert "cost-aware" not in low.reason
+    # genuinely tight deadline: even at w = 1 the minimal solve already
+    # IS the only feasible slice — no deviation, no cost-aware note
+    tight = _planner(1.3, cost_weight=1.0)
+    t_obs = 2.0 * tight.cluster_model.predict_time(ONPREM)
+    est = _est(1800.0, 2300.0, t_obs, 100, 200)
+    d = tight.plan(est, 100, 200, observed_step_s=t_obs,
+                   effective_chips=ONPREM)
+    assert d.burst and d.chips_burst == 256
+    assert "cost-aware" not in d.reason
+
+
+def test_knob_zero_is_exactly_the_deadline_first_solve():
+    """cost_weight = 0 must reproduce the price-free planner's decision
+    bit-for-bit on every sizing field (cost projection aside)."""
+    free = _congested_plan(_planner(1.3, cost_weight=0.0, price=0.0))
+    priced = _congested_plan(_planner(1.3, cost_weight=0.0, price=3.0))
+    for f in ("burst", "chips_burst", "gamma", "correction_K",
+              "cores_needed", "est_time_burst_s", "overhead_s"):
+        assert getattr(free, f) == getattr(priced, f), f
+    assert free.est_cost_usd == 0.0 and priced.est_cost_usd > 0.0
+
+
+def test_linear_law_cost_aware_keeps_minimal_slice():
+    """Work-conserving (t ∝ 1/c) scaling: chip-hours are monotone in
+    slice size, so the cheapest feasible slice IS the minimal one and
+    cost-awareness must not change the pick (fleet back-compat)."""
+    blind = _congested_plan(_planner(1.0, cost_weight=0.0))
+    aware = _congested_plan(_planner(1.0, cost_weight=1.0))
+    assert aware.chips_burst == blind.chips_burst
+    assert "cost-aware" not in aware.reason
+
+
+def test_cost_projection_is_price_times_chip_hours():
+    d = _congested_plan(_planner(1.3, cost_weight=0.6))
+    assert d.est_cost_usd == pytest.approx(
+        3.0 * d.chips_burst * d.est_hold_s / 3600.0
+    )
+    # the hold projection never exceeds running the whole remainder on
+    # the combined fleet
+    p = _planner(1.3, cost_weight=0.6)
+    assert d.est_hold_s <= 100 * p.cluster_model.predict_time(ONPREM) * 2

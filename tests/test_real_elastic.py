@@ -1,0 +1,384 @@
+"""Real-session elastic loop (DESIGN.md §14).
+
+Covers: wall-clock-driven policy evaluation, first-class mid-run
+deadline changes, elastic chip-second billing in the orchestrator, the
+FWISession amortization rescale across RESHARD onto a different fleet,
+and — in a subprocess with multiple host devices — the full acceptance
+scenario: FWISession completes a deadline-squeeze under the `plan`
+policy with ≥1 GROW and ≥1 RETIRE applied through real re-striping, and
+the final wavefield matches an unscaled reference run.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BurstPlanner,
+    DeadlinePredictor,
+    ElasticOrchestrator,
+    LogCapacityModel,
+    OverheadModel,
+    PodSpec,
+    Resources,
+    ScaleAction,
+    elastic_chips,
+)
+from repro.core.sim_session import SimWorkload, sim_session_factory
+
+LEGAL = [16, 32, 64, 128, 256]
+OV = OverheadModel(ckpt_s=5, provision_s=60, restart_s=20)
+
+
+def _planner(**kw):
+    m = LogCapacityModel.fit(LEGAL, [2000.0 / c for c in LEGAL])
+    defaults = dict(
+        cluster_model=m, cloud_model=m, chips_cluster=256,
+        legal_slices=LEGAL, overheads=OV,
+    )
+    defaults.update(kw)
+    return BurstPlanner(**defaults)
+
+
+class _Counting:
+    """Records every policy evaluation's (step, elapsed)."""
+
+    name = "counting"
+
+    def __init__(self):
+        self.calls = []
+
+    def decide(self, ctx):
+        self.calls.append((ctx.step, ctx.elapsed_s))
+        return ScaleAction("hold")
+
+
+class _Scripted:
+    name = "scripted"
+
+    def __init__(self, grow_at=16, shrink_at=32, retire_at=48,
+                 chips=64, slowdown=1.4):
+        self.grow_at, self.shrink_at, self.retire_at = \
+            grow_at, shrink_at, retire_at
+        self.chips, self.slowdown = chips, slowdown
+
+    def decide(self, ctx):
+        if ctx.step == self.grow_at:
+            return ScaleAction("grow", chips=self.chips,
+                               slowdown=self.slowdown)
+        if ctx.step == self.shrink_at:
+            return ScaleAction("shrink", chips=self.chips // 2)
+        if ctx.step == self.retire_at:
+            return ScaleAction("retire")
+        return ScaleAction("hold")
+
+
+def _initial(chips=256):
+    return Resources(pods=[PodSpec(chips, name="cluster")], shares=[1.0])
+
+
+def test_wall_clock_eval_interval_drives_policy():
+    """eval_interval_s evaluates the policy on the session clock, not a
+    step count: ~elapsed/interval calls, spaced ≥ one interval apart."""
+    pol = _Counting()
+    orch = ElasticOrchestrator(
+        planner=_planner(), predictor=DeadlinePredictor(10_000.0),
+        check_every=1, ckpt_every=1000, eval_interval_s=50.0,
+    )
+    rec = orch.run(
+        session_factory=sim_session_factory(
+            SimWorkload(2000.0, jitter=0.0),
+            rng=np.random.default_rng(0),
+        ),
+        initial=_initial(), steps_total=60, autoscaler=pol,
+    )
+    # 60 steps × 7.8125 s = 468.75 s → crossings at 50,100,...,450
+    assert len(pol.calls) == 9
+    gaps = [b - a for (_, a), (_, b) in zip(pol.calls, pol.calls[1:])]
+    assert all(g >= 50.0 - 7.82 for g in gaps)
+    assert rec.completed
+    # with check_every=1 and no interval it would have been 59 calls
+    pol2 = _Counting()
+    orch2 = ElasticOrchestrator(
+        planner=_planner(), predictor=DeadlinePredictor(10_000.0),
+        check_every=1, ckpt_every=1000,
+    )
+    orch2.run(
+        session_factory=sim_session_factory(
+            SimWorkload(2000.0, jitter=0.0),
+            rng=np.random.default_rng(0),
+        ),
+        initial=_initial(), steps_total=60, autoscaler=pol2,
+    )
+    assert len(pol2.calls) == 59
+
+
+def test_nonpositive_eval_interval_rejected():
+    for bad in (0.0, -5.0):
+        with pytest.raises(ValueError):
+            ElasticOrchestrator(
+                planner=_planner(), predictor=DeadlinePredictor(1000.0),
+                eval_interval_s=bad,
+            )
+
+
+def test_deadline_changes_schedule_applies_and_triggers_burst():
+    orch = ElasticOrchestrator(
+        planner=_planner(), predictor=DeadlinePredictor(10_000.0),
+        check_every=8,
+    )
+    rec = orch.run(
+        session_factory=sim_session_factory(
+            SimWorkload(2000.0, jitter=0.01),
+            rng=np.random.default_rng(1),
+        ),
+        initial=_initial(), steps_total=300,
+        deadline_changes=[(450.0, 1800.0)],
+    )
+    assert orch.predictor.deadline_s == 1800.0
+    assert [e for e in rec.events if e.kind == "deadline"]
+    assert [e for e in rec.events if e.kind == "burst"]
+    # the history records when the tightening landed
+    assert orch.predictor.deadline_at(0.0) == 10_000.0
+    assert orch.predictor.deadline_at(rec.elapsed_s) == 1800.0
+
+
+def test_orchestrator_bills_elastic_chip_seconds():
+    """cloud_chip_s integrates elastic chips over held time (steps plus
+    non-provisioning scale overheads) and is priced via the planner."""
+    planner = _planner(price_per_chip_hour=3.0)
+    orch = ElasticOrchestrator(
+        planner=planner, predictor=DeadlinePredictor(10_000.0),
+        check_every=8, ckpt_every=1000, cloud_slowdown=1.4,
+    )
+    rec = orch.run(
+        session_factory=sim_session_factory(
+            SimWorkload(2000.0, jitter=0.0),
+            rng=np.random.default_rng(0),
+        ),
+        initial=_initial(), steps_total=60,
+        autoscaler=_Scripted(grow_at=16, shrink_at=32, retire_at=48),
+    )
+    # reconstruct expected billing from the recorded step times/events
+    held = {e.step: e.detail["cloud_chips"] for e in rec.events
+            if e.kind == "scale"}
+    chips, expect = 0, 0.0
+    resize_ov = OV.ckpt_s + OV.restart_s      # provisioning not billed
+    for i, dt in enumerate(rec.step_times):
+        step = i + 1
+        expect += chips * dt
+        if step in held:
+            chips = held[step]
+            expect += chips * resize_ov
+    assert rec.cloud_chip_s == pytest.approx(expect)
+    assert rec.cloud_cost_usd == pytest.approx(expect / 3600.0 * 3.0)
+    assert rec.cloud_chip_s > 0
+    # grown pod carries the provider's true K, not the policy belief
+    grow = next(e for e in rec.events
+                if e.kind == "scale" and e.detail["kind"] == "grow")
+    assert grow.detail["cloud_chips"] == 64
+
+
+def test_nonburst_run_bills_zero():
+    planner = _planner(price_per_chip_hour=3.0)
+    orch = ElasticOrchestrator(
+        planner=planner, predictor=DeadlinePredictor(10_000.0),
+        check_every=8,
+    )
+    rec = orch.run(
+        session_factory=sim_session_factory(
+            SimWorkload(2000.0, jitter=0.0),
+            rng=np.random.default_rng(0),
+        ),
+        initial=_initial(), steps_total=40,
+    )
+    assert rec.cloud_chip_s == 0.0 and rec.cloud_cost_usd == 0.0
+
+
+# --------------------------- FWISession amortization across RESHARD
+
+
+def _fwi_cfg():
+    from repro.fwi.solver import FWIConfig
+    return FWIConfig(nz=32, nx=64, timesteps=32, n_shots=1,
+                     sponge_width=4)
+
+
+def test_fwi_amortized_rescaled_when_resources_differ():
+    """Regression: amortized_s restored verbatim across RESHARD made
+    the first post-reshard monitor sample report the OLD fleet's step
+    time; a fleet-signature mismatch now rescales it by the modeled
+    effective-throughput ratio."""
+    from repro.fwi.driver import FWISession, TimeModel
+
+    cfg = _fwi_cfg()
+    res1 = Resources(pods=[PodSpec(chips=64, name="cluster")],
+                     shares=[1.0])
+    rng = np.random.default_rng(0)
+    s = FWISession(cfg, res1, 0, None, time_model=TimeModel(jitter=0.0),
+                   rng=rng, exchange_interval=4, scan_block=8)
+    for i in range(5):
+        s.run_step(i)
+    a0 = s._amortized
+    assert a0 > 0
+    snap = s.checkpoint(5)
+    # identical fleet: the mid-block measurement survives verbatim
+    s_same = FWISession(cfg, res1, 5, snap,
+                        time_model=TimeModel(jitter=0.0), rng=rng,
+                        exchange_interval=4, scan_block=8)
+    assert s_same._amortized == a0
+    # grown fleet: rescaled by eff_old / eff_new
+    res2 = ElasticOrchestrator.apply_scale(
+        res1, ScaleAction("grow", chips=64, slowdown=1.4)
+    )
+    s2 = FWISession(cfg, res2, 5, snap,
+                    time_model=TimeModel(jitter=0.0), rng=rng,
+                    exchange_interval=4, scan_block=8)
+    eff1, eff2 = 64.0, 64.0 + 64.0 / 1.4
+    assert s2._amortized == pytest.approx(a0 * eff1 / eff2)
+    assert s2._amortized < a0
+
+
+def test_fwi_amortized_rescale_through_orchestrator_reshard():
+    from repro.fwi.driver import TimeModel, fwi_session_factory
+
+    cfg = _fwi_cfg()
+    base = fwi_session_factory(
+        cfg, TimeModel(jitter=0.0), exchange_interval=4, scan_block=8
+    )
+    sessions = []                        # (session, amortized at birth)
+
+    def factory(res, start_step, restored):
+        s = base(res, start_step, restored)
+        sessions.append((s, s._amortized))
+        return s
+
+    orch = ElasticOrchestrator(
+        planner=_planner(chips_cluster=64),
+        predictor=DeadlinePredictor(10_000.0),
+        check_every=6, ckpt_every=1000, cloud_slowdown=1.4,
+    )
+    orch.run(
+        session_factory=factory,
+        initial=Resources(pods=[PodSpec(chips=64, name="cluster")],
+                          shares=[1.0]),
+        steps_total=16,
+        autoscaler=_Scripted(grow_at=6, shrink_at=10 ** 9,
+                             retire_at=10 ** 9, chips=64),
+    )
+    assert len(sessions) == 2            # initial + post-grow reshard
+    (pre, _), (_, post_a0) = sessions
+    # pre measured exactly one block (abandoned mid-block at the grow)
+    assert pre._amortized > 0
+    eff1, eff2 = 64.0, 64.0 + 64.0 / 1.4
+    assert post_a0 == pytest.approx(pre._amortized * eff1 / eff2)
+
+
+def test_elastic_stripes_for_mapping():
+    from repro.fwi.driver import elastic_stripes_for
+
+    f = elastic_stripes_for(1, 2)
+    onprem = _initial(64)
+    grown = ElasticOrchestrator.apply_scale(
+        onprem, ScaleAction("grow", chips=32, slowdown=1.4)
+    )
+    assert f(onprem) == 1 and f(grown) == 2
+    assert elastic_chips(grown) == 32
+    retired = ElasticOrchestrator.apply_scale(
+        grown, ScaleAction("retire")
+    )
+    assert f(retired) == 1
+
+
+# ----------------------------- end-to-end acceptance (subprocess)
+
+_E2E_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys
+sys.path.insert(0, sys.argv[1])
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    BurstPlanner, DeadlinePredictor, ElasticOrchestrator,
+    LogCapacityModel, OverheadModel, PodSpec, Resources, elastic_chips,
+)
+from repro.fwi.driver import TimeModel, elastic_stripes_for, \
+    fwi_session_factory
+from repro.fwi.solver import FWIConfig, run_forward
+from repro.sim import PlanAutoscaler
+
+cfg = FWIConfig(nz=48, nx=96, timesteps=120, n_shots=1, sponge_width=8)
+W, K, LEGAL = 64.0, 1.4, [16, 32, 64, 128]
+cs = sorted(set(LEGAL) | {64})
+planner = BurstPlanner(
+    cluster_model=LogCapacityModel.fit(cs, [W / c for c in cs]),
+    cloud_model=LogCapacityModel.fit(cs, [K * W / c for c in cs]),
+    chips_cluster=64, legal_slices=LEGAL,
+    overheads=OverheadModel(ckpt_s=5.0, provision_s=10.0, restart_s=5.0),
+    price_per_chip_hour=3.0, cost_weight=0.5,
+)
+orch = ElasticOrchestrator(
+    planner=planner, predictor=DeadlinePredictor(400.0),
+    check_every=8, ckpt_every=40, eval_interval_s=7.0,
+    cloud_slowdown=K,
+)
+base = fwi_session_factory(
+    cfg, TimeModel(chip_seconds_per_step=W, jitter=0.01),
+    stripes_for=elastic_stripes_for(1, 2),
+    exchange_interval=4, scan_block=8,
+)
+sessions = []
+
+def factory(res, start_step, restored):
+    s = base(res, start_step, restored)
+    sessions.append((s, len(res.pods)))
+    return s
+
+rec = orch.run(
+    session_factory=factory,
+    initial=Resources(pods=[PodSpec(chips=64, name="cluster")],
+                      shares=[1.0]),
+    steps_total=120,
+    autoscaler=PlanAutoscaler(),
+    deadline_changes=[(20.0, 105.0), (60.0, 400.0)],
+)
+kinds = [e.detail["kind"] for e in rec.events if e.kind == "scale"]
+assert "grow" in kinds, kinds
+assert ("retire" in kinds) or ("shrink" in kinds), kinds
+assert rec.met_deadline, (rec.elapsed_s, rec.deadline_s)
+assert rec.cloud_chip_s > 0
+assert elastic_chips(rec.final_resources) == 0, "pod must be retired"
+# the grow really re-striped the domain across 2 devices
+assert max(s._n_stripes for s, _ in sessions) == 2
+assert sessions[-1][0]._n_stripes == 1
+
+# wavefield invariance: the policy-scaled run (1 -> 2 -> 1 stripes,
+# every transition through ckpt -> remesh -> reshard) matches an
+# unscaled single-device reference bit-for-bit up to the documented
+# sharded-schedule tolerance
+ref, _ = run_forward(cfg, steps=120)
+last = sessions[-1][0]
+assert last.t == 120, last.t
+err = float(jnp.max(jnp.abs(
+    np.asarray(last.p) - np.asarray(ref.p)
+)))
+assert err < 1e-8, f"wavefield diverged across scale events: {err}"
+print("E2E_OK", len(kinds), round(rec.elapsed_s, 1), err)
+"""
+
+
+def test_fwi_deadline_squeeze_plan_policy_end_to_end_subprocess():
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _E2E_SCRIPT, src],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "E2E_OK" in out.stdout
