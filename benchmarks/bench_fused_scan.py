@@ -49,6 +49,7 @@ import jax.numpy as jnp  # noqa: E402
 from repro.fwi.domain import (  # noqa: E402
     halo_exchange_plan,
     make_sharded_scan_runner,
+    pick_schedule,
     stripe_mesh,
 )
 from repro.fwi.solver import (  # noqa: E402
@@ -268,6 +269,106 @@ def trajectory_point(cfg: FWIConfig | None = None, steps: int = 48,
     }
 
 
+BIG_GRIDS = ((4096, 4096), (8192, 2048))
+
+
+def build_big_engines(cfg: FWIConfig, steps: int, *,
+                      stripes: int | None = None):
+    """Reduced engine set for production-scale grids (DESIGN.md §15).
+
+    The seed loop / PR 1 scan ancestors are dropped (minutes per round
+    at 4096² for a long-settled comparison); what matters at scale is
+    resident vs STREAMED tiling and the fused vs overlap vs pipeline
+    halo schedules.  Pallas-interpret streaming is correctness-only on
+    CPU (the ci.sh big-grid smoke covers it); wall-clock rows here use
+    the XLA mirrors of the same tilings."""
+    st = ShotState.init(cfg)
+    k = 4
+    n = stripes if stripes is not None else min(2, jax.device_count())
+    engines = {}
+
+    for name, stream in (("fused_block_resident", False),
+                         ("fused_block_streamed", True)):
+        runner = make_block_runner(cfg, k=k, stream=stream,
+                                   collect_traces=False)
+
+        def fn(runner=runner):
+            jax.block_until_ready(runner(st.p, st.p_prev, 0, steps))
+
+        engines[name] = fn
+
+    keffs = {}
+    for name, sched in (("sharded_fused", "fused"),
+                        ("sharded_overlap", "overlap"),
+                        ("sharded_pipeline", "pipeline")):
+        run_s, place, keff = make_sharded_scan_runner(
+            cfg, stripe_mesh(n), k=k, overlap=sched
+        )
+        ps, pps = place((st.p, st.p_prev))
+        blocks = steps // keff
+
+        def sharded(run_s=run_s, ps=ps, pps=pps, blocks=blocks):
+            jax.block_until_ready(run_s(ps, pps, 0, blocks))
+
+        engines[f"{name}_k{keff}"] = sharded
+        keffs[name] = keff
+
+    meta = {"k": k, "stripes": n, "k_effective": keffs,
+            "schedule_auto": pick_schedule()}
+    return engines, meta
+
+
+def big_trajectory_point(grids=BIG_GRIDS, steps: int = 8,
+                         rounds: int = 2) -> dict:
+    """Production-scale trajectory point: per-grid steps/sec for the
+    streamed-vs-resident tilings and the three halo schedules, the HBM
+    boundary proxy, and the VMEM capacity bookkeeping that motivates
+    the streamed kernel (resident bytes vs budget vs streamed bytes)."""
+    from repro.kernels.stencil.kernel import (
+        DEFAULT_VMEM_BUDGET,
+        pick_bz_stream,
+        resident_vmem_bytes,
+        should_stream,
+        stream_vmem_bytes,
+    )
+
+    point = {
+        "tier": "big",
+        "host_parallel_scaling": round(host_parallel_scaling(), 2),
+        "grids": {},
+    }
+    for nz, nx in grids:
+        cfg = FWIConfig(nz=nz, nx=nx, n_shots=1,
+                        timesteps=max(steps, 8))
+        engines, meta = build_big_engines(cfg, steps)
+        best = _interleaved_best(engines, rounds=rounds)
+        base = best[f"sharded_fused_k{meta['k_effective']['sharded_fused']}"]
+        k = meta["k"]
+        sbz = pick_bz_stream(nz, nx, k)
+        proxy = hbm_boundary_proxy(cfg, k=k)
+        point["grids"][f"{nz}x{nx}"] = {
+            "config": {"nz": nz, "nx": nx, "n_shots": cfg.n_shots,
+                       "timesteps_measured": steps},
+            "steps_per_sec": {nm: round(steps / t, 3)
+                              for nm, t in best.items()},
+            "us_per_step": {nm: round(t / steps * 1e6, 1)
+                            for nm, t in best.items()},
+            "speedup_vs_sharded_fused": {nm: round(base / t, 3)
+                                         for nm, t in best.items()},
+            "engine_meta": meta,
+            "vmem": {
+                "budget_bytes": DEFAULT_VMEM_BUDGET,
+                "resident_bytes_k4": resident_vmem_bytes(nz, nx, k),
+                "fits_resident": not should_stream(nz, nx, k),
+                "stream_bz": sbz,
+                "stream_bytes": stream_vmem_bytes(nz, nx, sbz, k),
+            },
+            "hbm_boundary_proxy": {kk: round(v, 3) if isinstance(v, float)
+                                   else v for kk, v in proxy.items()},
+        }
+    return point
+
+
 def run() -> list[str]:
     rows = []
     cfg = FWIConfig()                      # paper Table 2: 600x600, 4 shots
@@ -322,12 +423,42 @@ def run() -> list[str]:
     return rows
 
 
+def run_big() -> list[str]:
+    """The --big tier as harness rows (one per engine per grid)."""
+    point = big_trajectory_point()
+    rows = [f"fused_scan_big.host_parallel_scaling,0,"
+            f"{point['host_parallel_scaling']}"]
+    for gname, g in point["grids"].items():
+        for nm, us in g["us_per_step"].items():
+            rows.append(
+                f"fused_scan_big.{gname}.{nm},{us:.0f},"
+                f"sps={g['steps_per_sec'][nm]};"
+                f"vs_sharded_fused={g['speedup_vs_sharded_fused'][nm]}"
+            )
+        vm = g["vmem"]
+        rows.append(
+            f"fused_scan_big.{gname}.vmem,0,"
+            f"resident_mb={vm['resident_bytes_k4'] / 2**20:.0f};"
+            f"budget_mb={vm['budget_bytes'] / 2**20:.0f};"
+            f"fits_resident={vm['fits_resident']};"
+            f"stream_bz={vm['stream_bz']};"
+            f"stream_mb={vm['stream_bytes'] / 2**20:.1f}"
+        )
+        rows.append(
+            f"fused_scan_big.{gname}.schedule_auto,0,"
+            f"{g['engine_meta']['schedule_auto']}"
+        )
+    return rows
+
+
 if __name__ == "__main__":
     import json
 
-    if len(sys.argv) > 1 and sys.argv[1] == "--write-trajectory":
-        path = sys.argv[2] if len(sys.argv) > 2 else "BENCH_fwi.json"
-        point = trajectory_point()
+    big = "--big" in sys.argv
+    argv = [a for a in sys.argv if a != "--big"]
+    if len(argv) > 1 and argv[1] == "--write-trajectory":
+        path = argv[2] if len(argv) > 2 else "BENCH_fwi.json"
+        point = big_trajectory_point() if big else trajectory_point()
         try:
             with open(path) as f:
                 doc = json.load(f)
@@ -339,5 +470,5 @@ if __name__ == "__main__":
             json.dump(doc, f, indent=1)
         print(f"wrote {path} ({len(doc['points'])} points)")
     else:
-        for row in run():
+        for row in (run_big() if big else run()):
             print(row)

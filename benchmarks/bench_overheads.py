@@ -112,6 +112,35 @@ def run() -> list[str]:
             f"compute_s={t_compute:.4f}"
         )
 
+    # measured-vs-modeled seam (DESIGN.md §15): the REAL probe —
+    # cross-device packed ppermute + measured stripe-interior compute
+    # (fwi.calibrate.measure_seam_latency) — against the planner's two
+    # seam models, so the with_measured_seam dispatch floor is auditable
+    # against the overlap-credited figure sim/scenarios.py actually uses
+    from repro.fwi.calibrate import measure_seam_latency
+
+    probe = measure_seam_latency(cfg, n_stripes=2, k=4, iters=20)
+    om_floor = OverheadModel().with_measured_seam(
+        probe["plan"], probe["ppermute_latency_s"]
+    )
+    om_probe = OverheadModel().with_overlapped_seam(
+        probe["plan"], probe["ppermute_latency_s"],
+        probe["interior_compute_s_per_step"],
+    )
+    rows.append(
+        f"overheads.seam_probe,{probe['ppermute_latency_s'] * 1e6:.1f},"
+        f"ppermute_us={probe['ppermute_latency_s'] * 1e6:.1f};"
+        f"interior_ms_per_step={probe['interior_compute_s_per_step'] * 1e3:.3f};"
+        f"mesh_devices={probe['mesh_devices']};backend={probe['backend']}"
+    )
+    rows.append(
+        f"overheads.seam_measured_vs_modeled,"
+        f"{om_floor.seam_s_per_step() * 1e6:.1f},"
+        f"floor_s_per_step={om_floor.seam_s_per_step():.6f};"
+        f"overlapped_s_per_step={om_probe.seam_s_per_step():.6f};"
+        f"hidden={om_probe.seam_s_per_step() == 0.0}"
+    )
+
     # monitor + planner per-step cost
     mon = StepTimeMonitor()
     pred = DeadlinePredictor(1000.0)

@@ -18,7 +18,11 @@
                           cost-blind planning brackets
 
 Usage:
-  python benchmarks/run.py [--only a,b,...] [--json PATH]
+  python benchmarks/run.py [--only a,b,...] [--json PATH] [--big]
+
+``--big`` adds the production-scale ``fused_scan_big`` tier (4096²,
+8192×2048 streamed-vs-resident + sharded-schedule rows); it is off by
+default because it takes minutes on CPU.
 
 ``--json`` additionally writes machine-readable results: one record per
 row with the name/us_per_call/derived fields parsed apart, plus the
@@ -57,6 +61,12 @@ from benchmarks import (  # noqa: E402
     bench_roofline,
 )
 
+class _BigFusedScan:
+    """`--big` tier shim: bench module whose run() is run_big()."""
+
+    run = staticmethod(bench_fused_scan.run_big)
+
+
 BENCHES = [
     ("envs", bench_envs),
     ("capacity_fit", bench_capacity_fit),
@@ -92,12 +102,18 @@ def main(argv: list[str] | None = None) -> None:
                     help="comma-separated bench names to run")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="write machine-readable results to PATH")
+    ap.add_argument("--big", action="store_true",
+                    help="include the production-scale fused_scan_big "
+                         "tier (minutes on CPU)")
     args = ap.parse_args(argv)
     only = {s for s in args.only.split(",") if s}
-    unknown = only - {name for name, _ in BENCHES}
+    benches = list(BENCHES)
+    if args.big or "fused_scan_big" in only:
+        benches.append(("fused_scan_big", _BigFusedScan))
+    unknown = only - {name for name, _ in benches}
     if unknown:
         ap.error(f"unknown bench(es): {sorted(unknown)}")
-    selected = [(n, m) for n, m in BENCHES if not only or n in only]
+    selected = [(n, m) for n, m in benches if not only or n in only]
 
     print("name,us_per_call,derived")
     failures = 0

@@ -64,6 +64,91 @@ def fit_gamma_model(base: FWIConfig, widths=None, **kw) -> GammaModel:
     return GammaModel.fit(g, t, name="fwi-width")
 
 
+def measure_seam_latency(
+    cfg: FWIConfig | None = None,
+    *,
+    n_stripes: int = 2,
+    k: int = 4,
+    iters: int = 30,
+    blocks: int = 8,
+) -> dict:
+    """REAL seam probe feeding ``OverheadModel.with_overlapped_seam``.
+
+    Two measurements with the exact shapes the sharded engine uses:
+
+    * ``ppermute_latency_s`` — median wall time of one jitted packed
+      halo ``ppermute`` over the real ``bytes_per_exchange`` payload of
+      ``halo_exchange_plan(cfg, n_stripes, k)``, on a stripe mesh of
+      ``min(n_stripes, len(jax.devices()))`` devices.  With a
+      multi-device mesh this is a genuine CROSS-DEVICE transfer (the
+      number the pipeline schedule must hide); on one device it
+      degrades to the dispatch-latency floor — ``mesh_devices`` in the
+      returned dict records which one was measured.
+    * ``interior_compute_s_per_step`` — measured per-step time of the
+      stripe-INTERIOR fused block (the k-step ``wave_block`` window at
+      the stripe-local width ``nx / n_stripes``), i.e. the compute the
+      in-flight exchange can hide behind.
+
+    The returned dict is the provenance-carrying input of
+    ``sim.scenarios.overheads_from_probe`` (committed there as a
+    literal snapshot so the sim layer stays jax-free) and of the
+    measured-vs-modeled seam rows in ``benchmarks/bench_overheads.py``
+    (DESIGN.md §15)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.fwi.domain import halo_exchange_plan, stripe_mesh
+    from repro.fwi.solver import ShotState, make_block_runner
+
+    cfg = cfg or FWIConfig()
+    plan = halo_exchange_plan(cfg, n_stripes, k=k)
+    k = int(plan["k"])                     # effective (clamped) block
+    n_mesh = max(min(n_stripes, len(jax.devices())), 1)
+    mesh = stripe_mesh(n_mesh)
+    perm = [(i, (i + 1) % n_mesh) for i in range(n_mesh)]
+    words = max(int(plan["bytes_per_exchange"]) // 4, 1)
+
+    f = jax.jit(shard_map(
+        lambda x: jax.lax.ppermute(x, "stripe", perm),
+        mesh=mesh, in_specs=P("stripe"), out_specs=P("stripe"),
+    ))
+    x = jnp.zeros((words * n_mesh,), jnp.float32)  # per-device payload
+    f(x).block_until_ready()                       # compile
+    ts = []
+    for _ in range(iters):
+        t0 = time.monotonic()
+        f(x).block_until_ready()
+        ts.append(time.monotonic() - t0)
+    t_pp = sorted(ts)[len(ts) // 2]
+
+    icfg = FWIConfig(
+        nz=cfg.nz, nx=cfg.nx // n_stripes, dt=cfg.dt, dx=cfg.dx,
+        timesteps=cfg.timesteps, n_shots=cfg.n_shots,
+        sponge_width=cfg.sponge_width,
+    )
+    st = ShotState.init(icfg)
+    blk = make_block_runner(icfg, k=k, collect_traces=False)
+    steps = k * blocks
+    jax.block_until_ready(blk(st.p, st.p_prev, 0, steps))  # compile
+    best = float("inf")
+    for _ in range(2):
+        t0 = time.monotonic()
+        jax.block_until_ready(blk(st.p, st.p_prev, 0, steps))
+        best = min(best, time.monotonic() - t0)
+    t_int = best / steps
+
+    return {
+        "plan": plan,
+        "ppermute_latency_s": t_pp,
+        "interior_compute_s_per_step": t_int,
+        "n_stripes": n_stripes,
+        "mesh_devices": n_mesh,
+        "backend": jax.default_backend(),
+    }
+
+
 def measure_single_device_step(cfg: FWIConfig, steps: int = 30) -> float:
     run_forward(cfg, steps=2)
     t0 = time.monotonic()

@@ -18,19 +18,35 @@ blocking.  For k > 1 the previous-field edges ride in the SAME message
 (stacked), so ppermute invocations per timestep drop k× (2 per block vs
 2 per step) while amortized bytes stay flat.
 
-Communication HIDING (DESIGN.md §13): the packed exchange is issued
-FIRST; the INTERIOR of the stripe — every column ≥ k·HALO from a seam,
-which by construction never reads the halo within one k-step block —
-is computed as one fused ``wave_block`` while the ppermute is in
-flight; two narrow (3·k·HALO-column) BOUNDARY windows that do consume
-the received halos are computed after and stitched in.  Per-block cost
-drops from ``compute + seam`` to ``max(interior, seam) + boundary``.
-The split only pays where collectives are async, so ``pick_overlap``
-auto-selects it per backend (TPU: on; synchronous hosts: the
-comm-avoiding single-window schedule, which has 3× less redundant
-compute).  ``halo_exchange_plan`` exports the seam-traffic AND overlap
+Communication HIDING comes in three schedules (DESIGN.md §13, §15):
+
+* ``"overlap"`` — within one block: the packed exchange is issued
+  FIRST; the INTERIOR of the stripe — every column ≥ k·HALO from a
+  seam, which by construction never reads the halo within one k-step
+  block — is computed as one fused ``wave_block`` while the ppermute
+  is in flight; two narrow (3·k·HALO-column) BOUNDARY windows that do
+  consume the received halos are computed after and stitched in.
+  Per-block cost drops from ``compute + seam`` to
+  ``max(interior, seam) + boundary``.
+* ``"pipeline"`` — ACROSS scan blocks: the received halos ride in the
+  scan carry, each block computes its boundary windows first from the
+  CARRIED halos, issues the NEXT block's exchange from their fresh
+  edge columns, then computes interior + stitch — so a whole block of
+  compute covers each exchange instead of only the interior window
+  (one eager prologue exchange; one wasted epilogue exchange).  The
+  per-block op graph is the overlap schedule's, reordered: pinned
+  BITWISE equal.
+* ``"fused"`` — comm-avoiding single window, exchange on the critical
+  path, least redundant compute (2·k·HALO columns vs 6·k·HALO for the
+  split schedules).
+
+The splits only pay where collectives are async, so ``pick_schedule``
+auto-selects per backend (TPU: "pipeline"; synchronous hosts:
+"fused"); ``pick_overlap`` is the legacy boolean view.
+``halo_exchange_plan`` exports the seam-traffic AND overlap
 bookkeeping (``overlap_fraction``) that ``OverheadModel
-.with_overlapped_seam`` and the overhead benches consume.
+.with_overlapped_seam``, the ``measure_seam_latency`` probe and the
+overhead benches consume.
 
 Physical domain edges need no special-casing: every window is
 zero-extended in x, which at a physical edge IS the reference's
@@ -67,8 +83,44 @@ def pick_overlap(backend: str | None = None) -> bool:
     fusion); on hosts whose ppermute is synchronous the split is pure
     overhead — 6·k·HALO redundant columns instead of 2·k·HALO — so the
     comm-avoiding single-window schedule wins.  Same auto-selection
-    spirit as the kernel's ``default_interpret``/``pick_bz``."""
+    spirit as the kernel's ``default_interpret``/``pick_bz``.
+
+    Kept as the boolean (PR 3) view of the choice; the full three-way
+    schedule selection lives in ``pick_schedule`` (DESIGN.md §15)."""
     return (backend or jax.default_backend()) == "tpu"
+
+
+def pick_schedule(backend: str | None = None) -> str:
+    """Three-way schedule auto-selection for the sharded scan runner.
+
+    * ``"pipeline"`` — double-buffered halo exchange ACROSS scan blocks:
+      block b+1's packed ppermute is issued before block b's interior
+      compute and seam stitch, so the exchange hides behind a whole
+      block of work instead of only the same block's interior window.
+      Needs async collectives — selected on TPU.
+    * ``"overlap"``  — PR 3's within-block split (exchange first,
+      interior while it flies, boundary windows after).
+    * ``"fused"``    — comm-avoiding single window, exchange on the
+      critical path; least redundant compute, the right choice where
+      collectives are synchronous anyway (CPU hosts).
+
+    All three produce BIT-IDENTICAL results on the XLA path — the
+    invariance tests pin it — so this is purely a performance choice;
+    ``measure_seam_latency`` (fwi/calibrate.py) audits it."""
+    return "pipeline" if (backend or jax.default_backend()) == "tpu" \
+        else "fused"
+
+
+def _as_schedule(overlap) -> str:
+    """Normalize the legacy bool knob: True -> "overlap", False ->
+    "fused"; strings pass through; None -> ``pick_schedule()``."""
+    if overlap is None:
+        return pick_schedule()
+    if isinstance(overlap, str):
+        if overlap not in ("fused", "overlap", "pipeline"):
+            raise ValueError(f"unknown halo schedule: {overlap!r}")
+        return overlap
+    return "overlap" if overlap else "fused"
 
 
 def _exchange_halo(edges_r: jnp.ndarray, edges_l: jnp.ndarray,
@@ -113,26 +165,38 @@ def effective_block(cfg: FWIConfig, n_stripes: int, k: int) -> int:
 @functools.lru_cache(maxsize=32)
 def _sharded_block_parts(cfg: FWIConfig, mesh: Mesh, k: int,
                          use_pallas: bool, bz: int | None = None,
-                         overlap: bool = True):
-    """(sm, v2e_all, spe_all, place, k): the UNJITTED shard_map'd k-step
-    fused block body plus its closure fields — callers jit at their own
-    boundary (wrapping the body in its own jit inside a lax.scan defeats
-    XLA's loop fusion; see solver.py).
+                         schedule: str = "overlap"):
+    """(sms, v2e_all, spe_all, place, k): the UNJITTED shard_map'd
+    k-step fused block bodies plus their closure fields — callers jit at
+    their own boundary (wrapping the body in its own jit inside a
+    lax.scan defeats XLA's loop fusion; see solver.py).  ``sms`` is a
+    dict: ``{"block"}`` for the "fused"/"overlap" schedules,
+    ``{"prologue", "pipeline"}`` for "pipeline".
 
-    overlap=True realizes the comm/compute-overlap schedule
-    (DESIGN.md §13): packed halo ppermute issued first; the stripe
-    INTERIOR advanced k fused steps (independent of the exchange,
-    overlappable with it); the two 3·k·HALO boundary windows — batched
-    into ONE ``wave_block`` call — consume the received halos and patch
-    the k·HALO seam-adjacent column strips.  overlap=False is the
-    comm-AVOIDING schedule only: one fused window over the whole
-    extended stripe, exchange on the critical path (less redundant
-    compute — 2·k·HALO vs 6·k·HALO extra columns — for hosts whose
-    collectives are synchronous anyway).  On the XLA path the overlap
-    schedule is pinned bitwise-identical to the reference; the
-    single-window schedule computes the identical op sequence but its
-    different fusion shapes may flush denormal wavefront tails
-    differently — equal up to sub-normal (< 1.2e-38) noise.
+    schedule="overlap" realizes the within-block comm/compute-overlap
+    schedule (DESIGN.md §13): packed halo ppermute issued first; the
+    stripe INTERIOR advanced k fused steps (independent of the
+    exchange, overlappable with it); the two 3·k·HALO boundary windows
+    — batched into ONE ``wave_block`` call — consume the received halos
+    and patch the k·HALO seam-adjacent column strips.
+    schedule="fused" is the comm-AVOIDING schedule only: one fused
+    window over the whole extended stripe, exchange on the critical
+    path (less redundant compute — 2·k·HALO vs 6·k·HALO extra columns —
+    for hosts whose collectives are synchronous anyway).
+    schedule="pipeline" double-buffers the exchange ACROSS scan blocks
+    (DESIGN.md §15): the halos arrive in the scan CARRY, the boundary
+    windows run first (their valid columns are the stripe's fresh
+    edges), block b+1's packed ppermute is issued from those fresh
+    edges BEFORE block b's interior compute and seam stitch, and the
+    interior fusion plus stitch fly under it.
+
+    On the XLA path the overlap and pipeline schedules are pinned
+    bitwise-identical to the reference (the pipeline computes the same
+    per-block graph as overlap — only the exchange's position in the
+    schedule moves); the single-window schedule computes the identical
+    op sequence but its different fusion shapes may flush denormal
+    wavefront tails differently — equal up to sub-normal (< 1.2e-38)
+    noise.
     """
     n = mesh.shape["stripe"]
     assert cfg.nx % n == 0, (cfg.nx, n)
@@ -150,76 +214,56 @@ def _sharded_block_parts(cfg: FWIConfig, mesh: Mesh, k: int,
     src_x = jnp.asarray(pos[:, 1])
     sh = NamedSharding(mesh, P(None, None, "stripe"))
 
-    def local_block(p, p_prev, v2e, spe, t0):
-        # p (S, NZ, NXl) local stripe; v2e/spe (1, NZ, NXl + 2·pad)
-        v2e, spe = v2e[0], spe[0]
-        idx = jax.lax.axis_index("stripe")
-        x0 = idx * nxl                  # global x of local column 0
-        srcv = wavelet[
+    def exchange_edges(p_r, p_l, pp_r, pp_l):
+        # ONE packed exchange for the whole k-step block; for k > 1 the
+        # p_prev edges ride in the same message (leading stacked axis)
+        if k > 1:
+            left, right = _exchange_halo(
+                jnp.stack([p_r, pp_r]), jnp.stack([p_l, pp_l]), "stripe"
+            )
+            return left[0], right[0], left[1], right[1]
+        lh_p, rh_p = _exchange_halo(p_r, p_l, "stripe")
+        # k=1 never reads the p_prev halo (halo outputs are discarded
+        # after one step) — zero-extend
+        z = jnp.zeros_like(pp_l)
+        return lh_p, rh_p, z, z
+
+    def make_srcv(t0):
+        return wavelet[
             jnp.clip(t0 + jnp.arange(k), 0, cfg.timesteps - 1)
         ] * (cfg.dt ** 2)
 
-        # --- 1) packed halo exchange, issued FIRST ------------------
-        # ONE exchange for the whole k-step block; for k > 1 the p_prev
-        # edges ride in the same message (leading stacked axis)
-        if k > 1:
-            er = jnp.stack([p[..., -pad:], p_prev[..., -pad:]])
-            el = jnp.stack([p[..., :pad], p_prev[..., :pad]])
-            left, right = _exchange_halo(er, el, "stripe")
-            lh_p, lh_pp = left[0], left[1]
-            rh_p, rh_pp = right[0], right[1]
-        else:
-            lh_p, rh_p = _exchange_halo(
-                p[..., -pad:], p[..., :pad], "stripe"
-            )
-            # k=1 never reads the p_prev halo (halo outputs are
-            # discarded after one step) — zero-extend
-            lh_pp = jnp.zeros_like(p_prev[..., :pad])
-            rh_pp = lh_pp
+    # --- k fused steps on a window via wave_block -------------------
+    def window(px, ppx, vw, sw, wx0, x0, srcv):
+        # wx0: local column of window column 0 (traced).  Sources
+        # inject into EVERY window covering their column, so redundant
+        # zones track true neighbor physics; each window's valid region
+        # is stitched disjointly below.
+        w = px.shape[-1]
 
-        # --- k fused steps on a window via wave_block ---------------
-        def window(px, ppx, vw, sw, wx0):
-            # wx0: local column of window column 0 (traced).  Sources
-            # inject into EVERY window covering their column, so
-            # redundant zones track true neighbor physics; each
-            # window's valid region is stitched disjointly below.
-            w = px.shape[-1]
-
-            def one(a, b, zi, xi):
-                xloc = xi - x0 - wx0
-                covered = (xloc >= 0) & (xloc < w)
-                sv = jnp.where(covered, srcv, 0.0)
-                xc = jnp.clip(xloc, 0, w - 1)
-                return wave_block(
-                    a, b, vw, sw, sv, zi, xc,
-                    receiver_row=cfg.receiver_depth,
-                    use_pallas=use_pallas, bz=bz,
-                )
-
-            return jax.vmap(one, in_axes=(0, 0, 0, 0))(
-                px, ppx, src_z, src_x
+        def one(a, b, zi, xi):
+            xloc = xi - x0 - wx0
+            covered = (xloc >= 0) & (xloc < w)
+            sv = jnp.where(covered, srcv, 0.0)
+            xc = jnp.clip(xloc, 0, w - 1)
+            return wave_block(
+                a, b, vw, sw, sv, zi, xc,
+                receiver_row=cfg.receiver_depth,
+                use_pallas=use_pallas, bz=bz,
             )
 
-        if not overlap:
-            # comm-avoiding only: ONE window over the extended stripe
-            # [-pad, nxl+pad); its zero-extension creep exactly eats
-            # the halos, leaving [0, nxl) valid after k steps
-            pe, ppe, tre = window(
-                jnp.concatenate([lh_p, p, rh_p], axis=-1),
-                jnp.concatenate([lh_pp, p_prev, rh_pp], axis=-1),
-                v2e, spe, -pad,
-            )
-            sl = (Ellipsis, slice(pad, pad + nxl))
-            return pe[sl], ppe[sl], tre[sl]
+        return jax.vmap(one, in_axes=(0, 0, 0, 0))(px, ppx, src_z, src_x)
 
-        # --- 2) INTERIOR: the stripe itself, no halo dependency -----
+    def interior(p, p_prev, v2e, spe, x0, srcv):
         # valid after k steps: columns [pad, nxl-pad) — everything the
         # seams cannot influence within one block
-        pi, ppi, tri = window(
-            p, p_prev, v2e[:, pad: pad + nxl], spe[:, pad: pad + nxl], 0
+        return window(
+            p, p_prev, v2e[:, pad: pad + nxl], spe[:, pad: pad + nxl],
+            0, x0, srcv,
         )
 
-        # --- 3) BOUNDARY windows, batched into ONE call -------------
+    def boundary(p, p_prev, lh_p, rh_p, lh_pp, rh_pp, v2e, spe, x0, srcv):
+        # two BOUNDARY windows, batched into ONE call:
         # left covers local [-pad, 2·pad) -> valid [0, pad);
         # right covers [nxl-2·pad, nxl+pad) -> valid [nxl-pad, nxl)
         bp = jnp.stack([
@@ -233,63 +277,143 @@ def _sharded_block_parts(cfg: FWIConfig, mesh: Mesh, k: int,
         bv = jnp.stack([v2e[:, : 3 * pad], v2e[:, nxl - pad:]])
         bs = jnp.stack([spe[:, : 3 * pad], spe[:, nxl - pad:]])
         wx0s = jnp.array([-pad, nxl - 2 * pad], jnp.int32)
-        pb, ppb, trb = jax.vmap(window, in_axes=(0, 0, 0, 0, 0))(
-            bp, bpp, bv, bs, wx0s
+        return jax.vmap(window, in_axes=(0, 0, 0, 0, 0, None, None))(
+            bp, bpp, bv, bs, wx0s, x0, srcv
         )
 
-        # --- 4) stitch the disjoint valid regions -------------------
-        def stitch(bnd, mid, axis=-1):
-            sl = [slice(None)] * (bnd.ndim - 1)
-            sl[axis] = slice(pad, 2 * pad)
-            mi = [slice(None)] * mid.ndim
-            mi[axis] = slice(pad, nxl - pad)
-            return jnp.concatenate(
-                [bnd[0][tuple(sl)], mid[tuple(mi)], bnd[1][tuple(sl)]],
-                axis=axis,
+    def stitch(bnd, mid, axis=-1):
+        # stitch the disjoint valid regions
+        sl = [slice(None)] * (bnd.ndim - 1)
+        sl[axis] = slice(pad, 2 * pad)
+        mi = [slice(None)] * mid.ndim
+        mi[axis] = slice(pad, nxl - pad)
+        return jnp.concatenate(
+            [bnd[0][tuple(sl)], mid[tuple(mi)], bnd[1][tuple(sl)]],
+            axis=axis,
+        )
+
+    def local_block(p, p_prev, v2e, spe, t0):
+        # p (S, NZ, NXl) local stripe; v2e/spe (1, NZ, NXl + 2·pad)
+        v2e, spe = v2e[0], spe[0]
+        x0 = jax.lax.axis_index("stripe") * nxl   # global x of column 0
+        srcv = make_srcv(t0)
+
+        # 1) packed halo exchange, issued FIRST
+        lh_p, rh_p, lh_pp, rh_pp = exchange_edges(
+            p[..., -pad:], p[..., :pad],
+            p_prev[..., -pad:], p_prev[..., :pad],
+        )
+
+        if schedule == "fused":
+            # comm-avoiding only: ONE window over the extended stripe
+            # [-pad, nxl+pad); its zero-extension creep exactly eats
+            # the halos, leaving [0, nxl) valid after k steps
+            pe, ppe, tre = window(
+                jnp.concatenate([lh_p, p, rh_p], axis=-1),
+                jnp.concatenate([lh_pp, p_prev, rh_pp], axis=-1),
+                v2e, spe, -pad, x0, srcv,
             )
+            sl = (Ellipsis, slice(pad, pad + nxl))
+            return pe[sl], ppe[sl], tre[sl]
 
-        return (stitch(pb, pi), stitch(ppb, ppi), stitch(trb, tri))
+        # 2) INTERIOR (no halo dependency) while the exchange flies;
+        # 3) boundary windows consume the received halos; 4) stitch
+        pi, ppi, tri = interior(p, p_prev, v2e, spe, x0, srcv)
+        pb, ppb, trb = boundary(
+            p, p_prev, lh_p, rh_p, lh_pp, rh_pp, v2e, spe, x0, srcv
+        )
+        return stitch(pb, pi), stitch(ppb, ppi), stitch(trb, tri)
 
-    sm = shard_map(
-        local_block,
-        mesh=mesh,
-        in_specs=(P(None, None, "stripe"), P(None, None, "stripe"),
-                  P("stripe", None, None), P("stripe", None, None), P()),
-        out_specs=(P(None, None, "stripe"), P(None, None, "stripe"),
-                   P(None, None, "stripe")),
-        # pallas_call has no replication-checking rule; the body is
-        # replication-safe by construction (everything is stripe-local)
-        check_vma=False,
-    )
+    def local_prologue(p, p_prev):
+        # eager packed exchange priming the pipeline's halo carry for
+        # block 0 — the only on-critical-path exchange of the whole scan
+        return jnp.stack(exchange_edges(
+            p[..., -pad:], p[..., :pad],
+            p_prev[..., -pad:], p_prev[..., :pad],
+        ))
+
+    def local_pipeline_block(p, p_prev, v2e, spe, t0, halos):
+        # halos (4, S, NZ, pad): [lh_p, rh_p, lh_pp, rh_pp] carried from
+        # the PREVIOUS block's exchange, already in flight a full block
+        v2e, spe = v2e[0], spe[0]
+        x0 = jax.lax.axis_index("stripe") * nxl
+        srcv = make_srcv(t0)
+        lh_p, rh_p, lh_pp, rh_pp = halos[0], halos[1], halos[2], halos[3]
+
+        # 1) BOUNDARY first: its valid columns [pad, 2·pad) are exactly
+        # the stripe's fresh edge columns after this block
+        pb, ppb, trb = boundary(
+            p, p_prev, lh_p, rh_p, lh_pp, rh_pp, v2e, spe, x0, srcv
+        )
+        # 2) issue block b+1's packed ppermute from those fresh edges —
+        # BEFORE the interior compute and the seam stitch, so the
+        # exchange hides behind a whole block of work
+        nh = exchange_edges(
+            pb[1][..., pad: 2 * pad], pb[0][..., pad: 2 * pad],
+            ppb[1][..., pad: 2 * pad], ppb[0][..., pad: 2 * pad],
+        )
+        # 3) interior — the big fusion the in-flight exchange rides over
+        pi, ppi, tri = interior(p, p_prev, v2e, spe, x0, srcv)
+        # 4) stitch; the fresh halos join the scan carry
+        return (stitch(pb, pi), stitch(ppb, ppi), stitch(trb, tri),
+                jnp.stack(nh))
+
+    field = P(None, None, "stripe")
+    parts = P("stripe", None, None)
+    halo_sp = P(None, None, None, "stripe")
+    # pallas_call has no replication-checking rule; the bodies are
+    # replication-safe by construction (everything is stripe-local)
+    sms = {}
+    if schedule == "pipeline":
+        sms["prologue"] = shard_map(
+            local_prologue, mesh=mesh, in_specs=(field, field),
+            out_specs=halo_sp, check_vma=False,
+        )
+        sms["pipeline"] = shard_map(
+            local_pipeline_block, mesh=mesh,
+            in_specs=(field, field, parts, parts, P(), halo_sp),
+            out_specs=(field, field, field, halo_sp), check_vma=False,
+        )
+    else:
+        sms["block"] = shard_map(
+            local_block, mesh=mesh,
+            in_specs=(field, field, parts, parts, P()),
+            out_specs=(field, field, field), check_vma=False,
+        )
 
     def place(state_fields):
         return jax.device_put(state_fields, sh)
 
-    return sm, v2e_all, spe_all, place, k
+    return sms, v2e_all, spe_all, place, k
 
 
 @functools.lru_cache(maxsize=32)
 def make_sharded_multistep(cfg: FWIConfig, mesh: Mesh, *, k: int = 1,
                            use_pallas: bool = False,
                            bz: int | None = None,
-                           overlap: bool | None = None):
+                           overlap: bool | str | None = None):
     """Temporally-blocked, comm/compute-overlapped sharded propagator.
 
     Returns (block_step, place): ``block_step(p, p_prev, t0)`` advances
     ALL k timesteps with a single packed halo exchange and returns
     (p, p_prev, traces) with traces (S, k, NX).  Fields are (S, NZ, NX)
-    sharded on x over "stripe".  ``overlap=None`` auto-selects the
-    schedule per backend (``pick_overlap``).
+    sharded on x over "stripe".  ``overlap`` takes the legacy bool
+    (True="overlap", False="fused") or a schedule name; ``None``
+    auto-selects per backend (``pick_schedule``).  The cross-block
+    "pipeline" schedule needs a scan to carry halos through, so the
+    single-block API maps it to its within-block form, "overlap".
 
     The requested k may be clamped so the overlap fits in one stripe
     (``effective_block``); callers advancing t0 must use the EFFECTIVE
     block size, exposed as ``block_step.k``.
     """
-    if overlap is None:
-        overlap = pick_overlap()
-    sm, v2e_all, spe_all, place, k = _sharded_block_parts(
-        cfg, mesh, k, use_pallas, bz, overlap
+    schedule = _as_schedule(overlap)
+    if schedule == "pipeline":
+        schedule = "overlap"
+    sms, v2e_all, spe_all, place, k = _sharded_block_parts(
+        cfg, mesh, k, use_pallas, bz, schedule
     )
+    sm = sms["block"]
 
     jit_block = jax.jit(
         lambda p, p_prev, t0: sm(p, p_prev, v2e_all, spe_all, t0)
@@ -324,33 +448,66 @@ def make_sharded_step(cfg: FWIConfig, mesh: Mesh, *,
 def make_sharded_scan_runner(cfg: FWIConfig, mesh: Mesh, *, k: int = 4,
                              use_pallas: bool = False,
                              bz: int | None = None,
-                             overlap: bool | None = None):
+                             overlap: bool | str | None = None):
     """Scan-fused, overlapped, temporally-blocked runner:
     run(p, p_prev, t0, blocks) advances blocks·k timesteps in ONE
     dispatch (a lax.scan over k-step fused blocks, one packed halo
-    exchange per block, interior overlapped with the exchange where the
-    backend's collectives are async — ``pick_overlap``).  Returns
-    (p, p_prev, traces (S, blocks·k, NX))."""
-    if overlap is None:
-        overlap = pick_overlap()
-    sm, v2e_all, spe_all, place, k = _sharded_block_parts(
-        cfg, mesh, k, use_pallas, bz, overlap
+    exchange per block).  ``overlap`` takes the legacy bool or a
+    schedule name ("fused"/"overlap"/"pipeline"); ``None`` auto-selects
+    per backend (``pick_schedule`` — "pipeline" where collectives are
+    async).  Under "pipeline" the halos ride in the scan CARRY: a
+    prologue exchange primes block 0, each block issues block b+1's
+    ppermute before its own interior compute and stitch, and the last
+    block's exchange is discarded (one wasted epilogue message —
+    the price of keeping every other exchange a full block ahead).
+    Returns (p, p_prev, traces (S, blocks·k, NX))."""
+    schedule = _as_schedule(overlap)
+    sms, v2e_all, spe_all, place, k = _sharded_block_parts(
+        cfg, mesh, k, use_pallas, bz, schedule
     )
 
-    @functools.partial(jax.jit, static_argnames=("blocks",))
-    def run(p, p_prev, t0, blocks: int):
-        def body(carry, b):
-            p, pp = carry
-            pn, pd, tr = sm(p, pp, v2e_all, spe_all, t0 + b * k)
-            return (pn, pd), tr
+    if schedule == "pipeline":
+        sm_pro, sm_pipe = sms["prologue"], sms["pipeline"]
 
-        (p, pp), traces = jax.lax.scan(
-            body, (p, p_prev), jnp.arange(blocks)
-        )
-        # (blocks, S, k, NX) -> (S, blocks·k, NX)
-        traces = jnp.moveaxis(traces, 0, 1)
-        traces = traces.reshape(traces.shape[0], -1, traces.shape[-1])
-        return p, pp, traces
+        @functools.partial(jax.jit, static_argnames=("blocks",))
+        def run(p, p_prev, t0, blocks: int):
+            halos = sm_pro(p, p_prev)
+
+            def body(carry, b):
+                p, pp, h = carry
+                pn, pd, tr, hn = sm_pipe(
+                    p, pp, v2e_all, spe_all, t0 + b * k, h
+                )
+                return (pn, pd, hn), tr
+
+            (p, pp, _), traces = jax.lax.scan(
+                body, (p, p_prev, halos), jnp.arange(blocks)
+            )
+            # (blocks, S, k, NX) -> (S, blocks·k, NX)
+            traces = jnp.moveaxis(traces, 0, 1)
+            traces = traces.reshape(
+                traces.shape[0], -1, traces.shape[-1]
+            )
+            return p, pp, traces
+    else:
+        sm = sms["block"]
+
+        @functools.partial(jax.jit, static_argnames=("blocks",))
+        def run(p, p_prev, t0, blocks: int):
+            def body(carry, b):
+                p, pp = carry
+                pn, pd, tr = sm(p, pp, v2e_all, spe_all, t0 + b * k)
+                return (pn, pd), tr
+
+            (p, pp), traces = jax.lax.scan(
+                body, (p, p_prev), jnp.arange(blocks)
+            )
+            # (blocks, S, k, NX) -> (S, blocks·k, NX)
+            traces = jnp.moveaxis(traces, 0, 1)
+            traces = traces.reshape(
+                traces.shape[0], -1, traces.shape[-1]
+            )
+            return p, pp, traces
 
     return run, place, k
 

@@ -196,7 +196,9 @@ def make_scan_runner(cfg: FWIConfig, *, use_pallas: bool = False,
 
 
 def _block_scan_body(cfg: FWIConfig, k: int, use_pallas: bool,
-                     bz: int | None, collect_traces: bool):
+                     bz: int | None, collect_traces: bool,
+                     stream: bool | None = None,
+                     vmem_budget: int | None = None):
     """Shared scan-over-fused-blocks body: local_run(p, p_prev, src_z,
     src_x, t0, steps static) -> (p, p_prev[, traces]) — UNJITTED, so
     both the single-host and the shot-sharded runner jit at their own
@@ -217,6 +219,7 @@ def _block_scan_body(cfg: FWIConfig, k: int, use_pallas: bool,
                 a, b, v2dt2, sponge, srcv, zi, xi,
                 receiver_row=cfg.receiver_depth,
                 use_pallas=use_pallas, bz=bz,
+                stream=stream, vmem_budget=vmem_budget,
             )
 
         return jax.vmap(one, in_axes=(0, 0, 0, 0))(
@@ -256,7 +259,9 @@ def _block_scan_body(cfg: FWIConfig, k: int, use_pallas: bool,
 @functools.lru_cache(maxsize=64)
 def make_block_runner(cfg: FWIConfig, *, k: int | None = None,
                       use_pallas: bool = False, bz: int | None = None,
-                      collect_traces: bool = True):
+                      collect_traces: bool = True,
+                      stream: bool | None = None,
+                      vmem_budget: int | None = None):
     """jit-once FUSED multi-step propagator: ``lax.scan`` over k-step
     fused blocks (one ``wave_block`` per block — DESIGN.md §13).
 
@@ -265,15 +270,18 @@ def make_block_runner(cfg: FWIConfig, *, k: int | None = None,
     ``t0`` is traced, ``steps`` static; a non-multiple-of-k step count
     runs a tail block of the remainder length.  Bit-identical to
     ``make_scan_runner`` on the XLA path (the block body is a pure
-    re-scheduling of the same ops).  Memoized on the FULL knob set
-    (cfg, k, bz, use_pallas, collect_traces) so autotuned variants
-    don't collide in the cache."""
+    re-scheduling of the same ops — and the auto-selected STREAMED
+    tiling for production grids keeps that contract via
+    ``wave_block_strips_ref``, see DESIGN.md §15).  Memoized on the
+    FULL knob set (cfg, k, bz, use_pallas, collect_traces, stream,
+    vmem_budget) so autotuned variants don't collide in the cache."""
     if k is None:
         k = pick_k(cfg.nz)
     pos = cfg.shot_positions()
     src_z = jnp.asarray(pos[:, 0])
     src_x = jnp.asarray(pos[:, 1])
-    local_run = _block_scan_body(cfg, k, use_pallas, bz, collect_traces)
+    local_run = _block_scan_body(cfg, k, use_pallas, bz, collect_traces,
+                                 stream, vmem_budget)
 
     @functools.partial(jax.jit, static_argnames=("steps",))
     def run(p, p_prev, t0, steps: int):
@@ -288,7 +296,9 @@ def make_shot_parallel_runner(cfg: FWIConfig, n_devices: int, *,
                               k: int | None = None,
                               use_pallas: bool = False,
                               bz: int | None = None,
-                              collect_traces: bool = True):
+                              collect_traces: bool = True,
+                              stream: bool | None = None,
+                              vmem_budget: int | None = None):
     """Fused block runner with the SHOT axis sharded over devices — the
     paper's FIRST-level task-parallel split (§3.1: shots are
     independent), realized on the fused engine (DESIGN.md §13).
@@ -318,7 +328,8 @@ def make_shot_parallel_runner(cfg: FWIConfig, n_devices: int, *,
     pos = cfg.shot_positions()
     src_z = jnp.asarray(pos[:, 0])
     src_x = jnp.asarray(pos[:, 1])
-    local_run = _block_scan_body(cfg, k, use_pallas, bz, collect_traces)
+    local_run = _block_scan_body(cfg, k, use_pallas, bz, collect_traces,
+                                 stream, vmem_budget)
     out_specs = (
         (P("shot"), P("shot"), P("shot")) if collect_traces
         else (P("shot"), P("shot"))

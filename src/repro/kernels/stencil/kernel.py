@@ -27,29 +27,63 @@ re-blocked for the TPU memory hierarchy instead of ported:
 Physical-boundary strips (first/last) zero their out-of-domain halo
 rows, reproducing ref.py's zero-halo convention exactly.
 
-Capacity note: the constant-map whole-array spec keeps the full field
-in VMEM (NZ·NX·4 B — 1.4 MB for the paper's 600² grid, comfortably
-under the ~16 MB/core budget).  Grids beyond ~1.8k² would need a
-second-level z-split on top.
+Capacity: the constant-map whole-array spec keeps the full field in
+VMEM (NZ·NX·4 B — 1.4 MB for the paper's 600² grid, comfortably under
+the ~16 MB/core budget), which hard-caps the resident design at
+~1k²-class grids.  Production surveys (≥ 4096² — DESIGN.md §15) run the
+STREAMED kernel instead: ``wave_block_stream_pallas`` holds only a
+double-buffered pair of (bz + 2·k·HALO, NX) haloed windows in VMEM and
+DMAs strip i+1 in from HBM while strip i computes its k-step trapezoid
+— ``stream_vmem_bytes`` is O(bz·NX), independent of NZ, so the grid
+height is unbounded by VMEM.  ``pick_bz_stream`` sizes the strip under
+an explicit budget and ``should_stream`` auto-selects the design per
+(shape, budget); the XLA-path mirror of the same tiling is
+``ref.py::wave_block_strips_ref`` (bit-exactness oracle).
 """
 from __future__ import annotations
 
 import functools
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 C0 = -5.0 / 2.0
 C1 = 4.0 / 3.0
 C2 = -1.0 / 12.0
 HALO = 2
 
+#: per-core VMEM working budget the tiling heuristics plan against
+#: (TPU cores have ~16 MB; interpret mode has no hard cap but the
+#: heuristics still honor it so CPU-validated tilings carry to TPU)
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
+
+
+class StripFallbackWarning(UserWarning):
+    """A grid with no usable strip divisor fell back to ONE whole-height
+    strip — correct, but the whole field goes VMEM-resident (the tall-
+    grid footgun the streamed path refuses outright)."""
+
 
 def default_interpret() -> bool:
     """Compiled on TPU, interpret mode everywhere else."""
     return jax.default_backend() != "tpu"
+
+
+def _warn_whole_strip(nz: int, cap: int, who: str) -> int:
+    warnings.warn(
+        f"{who}: nz={nz} has no usable strip divisor <= cap={cap}; "
+        f"falling back to a SINGLE whole-height strip ({nz} rows "
+        f"VMEM-resident). Fine for small grids; for tall grids pad nz "
+        f"to a composite height or use the streamed kernel "
+        f"(wave_block_stream_pallas), which refuses this fallback.",
+        StripFallbackWarning,
+        stacklevel=3,
+    )
+    return nz
 
 
 def pick_bz(nz: int, cap: int = 128) -> int:
@@ -58,12 +92,15 @@ def pick_bz(nz: int, cap: int = 128) -> int:
     Never returns a strip shorter than HALO — the kernel's clamped
     neighbor-row slices assume bz ≥ HALO, so a 1-row strip (e.g. prime
     nz > cap) would silently corrupt the stencil; such grids fall back
-    to a single whole-height strip instead."""
+    to a single whole-height strip (with a ``StripFallbackWarning`` when
+    that strip is taller than the cap — the whole field goes resident)."""
     aligned = [b for b in range(8, cap + 1, 8) if nz % b == 0]
     if aligned:
         return max(aligned)
     ok = [b for b in range(HALO, cap + 1) if nz % b == 0]
-    return max(ok) if ok else nz
+    if ok:
+        return max(ok)
+    return _warn_whole_strip(nz, cap, "pick_bz") if nz > cap else nz
 
 
 def _shift_x(a, d: int, nx: int):
@@ -152,16 +189,77 @@ def pick_bz_block(nz: int, k: int, cap: int = 128) -> int:
     Largest divisor of nz ≤ cap (preferring 8-aligned strips) whose
     trapezoidal window ``bz + 2·k·HALO`` still fits inside the field;
     grids too short for any multi-strip trapezoid fall back to a single
-    whole-height strip (window == field, both edges physical)."""
+    whole-height strip (window == field, both edges physical), warning
+    via ``StripFallbackWarning`` when the fallback strip exceeds the cap
+    (tall grid going whole-field resident — the streamed path raises
+    instead, see ``pick_bz_stream``)."""
     pad = 2 * k * HALO
     aligned = [b for b in range(8, cap + 1, 8)
                if nz % b == 0 and b + pad <= nz]
     if aligned:
         return max(aligned)
     ok = [b for b in range(2, cap + 1) if nz % b == 0 and b + pad <= nz]
+    if ok:
+        return max(ok)
     # no multi-row strip fits (e.g. prime nz): one whole-height strip
     # beats a degenerate 1-row tiling that recomputes the window nz times
-    return max(ok) if ok else nz
+    return _warn_whole_strip(nz, cap, "pick_bz_block") if nz > cap else nz
+
+
+def resident_vmem_bytes(nz: int, nx: int, k: int = 1,
+                        bz: int | None = None) -> int:
+    """VMEM footprint of the RESIDENT (whole-array BlockSpec) design:
+    four whole (NZ, NX) f32 fields fetched once, plus the pipeline's
+    double-buffered output strips and the trace block."""
+    bz = min(bz if bz is not None else 128, nz)
+    return 4 * (4 * nz * nx + 2 * 2 * bz * nx + k * nx)
+
+
+def stream_vmem_bytes(nz: int, nx: int, bz: int, k: int) -> int:
+    """VMEM footprint of the STREAMED design: two DMA slots of four
+    (win, NX) haloed f32 windows, the pipeline's double-buffered output
+    strips, and the trace block — O(bz·NX), independent of NZ."""
+    win = min(bz + 2 * k * HALO, nz)
+    return 4 * (2 * 4 * win * nx + 2 * 2 * bz * nx + k * nx)
+
+
+def should_stream(nz: int, nx: int, k: int = 1,
+                  vmem_budget: int | None = None) -> bool:
+    """True when the whole-array resident design would not fit the VMEM
+    budget — the auto-dispatch rule ``ops.wave_block`` applies."""
+    budget = vmem_budget if vmem_budget is not None else DEFAULT_VMEM_BUDGET
+    return resident_vmem_bytes(nz, nx, k) > budget
+
+
+def pick_bz_stream(nz: int, nx: int, k: int, *,
+                   vmem_budget: int | None = None, cap: int = 512) -> int:
+    """Strip height for the STREAMED k-step kernel under a VMEM budget.
+
+    Largest 8-aligned divisor of nz ≤ cap whose double-buffered haloed
+    windows fit ``vmem_budget`` (falling back to unaligned divisors ≥ 2
+    before giving up).  Unlike ``pick_bz_block`` there is NO whole-height
+    fallback: a strip that cannot be streamed within the budget raises —
+    the silent blow-the-budget path is exactly the footgun the streamed
+    design exists to remove."""
+    budget = vmem_budget if vmem_budget is not None else DEFAULT_VMEM_BUDGET
+
+    def fits(b: int) -> bool:
+        return (nz % b == 0 and b + 2 * k * HALO <= nz
+                and stream_vmem_bytes(nz, nx, b, k) <= budget)
+
+    aligned = [b for b in range(8, min(cap, nz) + 1, 8) if fits(b)]
+    if aligned:
+        return max(aligned)
+    ok = [b for b in range(2, min(cap, nz) + 1) if fits(b)]
+    if ok:
+        return max(ok)
+    raise ValueError(
+        f"no streamable strip height for nz={nz}, nx={nx}, k={k} under "
+        f"vmem_budget={budget}: either nz has no divisor whose "
+        f"(bz + {2 * k * HALO}, {nx}) double-buffered windows fit the "
+        f"budget, or the grid is too short for a k={k} trapezoid. "
+        f"Lower k, pad nz to a composite height, or raise the budget."
+    )
 
 
 def pick_k(nz: int, cap: int = 8) -> int:
@@ -174,6 +272,51 @@ def pick_k(nz: int, cap: int = 8) -> int:
     while k > 1 and pick_bz_block(nz, k) == nz and nz > 2 * k * HALO:
         k //= 2
     return max(k, 1)
+
+
+def _trapezoid_k_steps(
+    cur, prevd, vw, sw, srcv_ref, srcp_ref, tr_ref,
+    *, start, row0, win: int, nx: int, bz: int, k: int, rrow: int,
+):
+    """k fused leapfrog steps on one (win, NX) haloed window.
+
+    The shared trapezoid body of BOTH block kernels (resident and
+    streamed): per inner step, zero-extend in z, 4th-order Laplacian
+    (z-rings from the extension, x-rings via ``_shift_x``), leapfrog +
+    sponge, iota-masked source injection, and receiver-row capture into
+    ``tr_ref`` for the program owning the receiver strip.  Returns the
+    updated (cur, prevd) window pair."""
+    zi = srcp_ref[0, 0]
+    xi = srcp_ref[0, 1]
+    iz = jax.lax.broadcasted_iota(jnp.int32, (win, nx), 0)
+    ix = jax.lax.broadcasted_iota(jnp.int32, (win, nx), 1)
+    zero_h = jnp.zeros((HALO, nx), cur.dtype)
+    own_receiver = (rrow >= row0) & (rrow < row0 + bz)
+
+    for j in range(k):
+        ext = jnp.concatenate([zero_h, cur, zero_h], axis=0)
+        lap = 2.0 * C0 * cur
+        lap += C1 * (ext[HALO - 1: HALO - 1 + win, :]
+                     + ext[HALO + 1: HALO + 1 + win, :])
+        lap += C2 * (ext[HALO - 2: HALO - 2 + win, :]
+                     + ext[HALO + 2: HALO + 2 + win, :])
+        lap += C1 * (_shift_x(cur, 1, nx) + _shift_x(cur, -1, nx))
+        lap += C2 * (_shift_x(cur, 2, nx) + _shift_x(cur, -2, nx))
+        pn = (2.0 * cur - prevd + vw * lap) * sw
+        # epilogue: source injection + receiver-row capture, fused
+        pn = pn + jnp.where(
+            (iz == zi - start) & (ix == xi), srcv_ref[0, j], 0.0
+        )
+
+        @pl.when(own_receiver)
+        def _capture(pn=pn, j=j):
+            tr_ref[j, :] = jax.lax.dynamic_slice_in_dim(
+                pn, rrow - start, 1, axis=0
+            )[0, :]
+
+        prevd = cur * sw
+        cur = pn
+    return cur, prevd
 
 
 def _wave_block_kernel(
@@ -205,36 +348,10 @@ def _wave_block_kernel(
     prevd = pp_ref[pl.ds(start, win), :]      # already sponge-damped
     vw = v2dt2_ref[pl.ds(start, win), :]
     sw = sponge_ref[pl.ds(start, win), :]
-    zi = srcp_ref[0, 0]
-    xi = srcp_ref[0, 1]
-    iz = jax.lax.broadcasted_iota(jnp.int32, (win, nx), 0)
-    ix = jax.lax.broadcasted_iota(jnp.int32, (win, nx), 1)
-    zero_h = jnp.zeros((HALO, nx), cur.dtype)
-    own_receiver = (rrow >= row0) & (rrow < row0 + bz)
-
-    for j in range(k):
-        ext = jnp.concatenate([zero_h, cur, zero_h], axis=0)
-        lap = 2.0 * C0 * cur
-        lap += C1 * (ext[HALO - 1: HALO - 1 + win, :]
-                     + ext[HALO + 1: HALO + 1 + win, :])
-        lap += C2 * (ext[HALO - 2: HALO - 2 + win, :]
-                     + ext[HALO + 2: HALO + 2 + win, :])
-        lap += C1 * (_shift_x(cur, 1, nx) + _shift_x(cur, -1, nx))
-        lap += C2 * (_shift_x(cur, 2, nx) + _shift_x(cur, -2, nx))
-        pn = (2.0 * cur - prevd + vw * lap) * sw
-        # epilogue: source injection + receiver-row capture, fused
-        pn = pn + jnp.where(
-            (iz == zi - start) & (ix == xi), srcv_ref[0, j], 0.0
-        )
-
-        @pl.when(own_receiver)
-        def _capture(pn=pn, j=j):
-            tr_ref[j, :] = jax.lax.dynamic_slice_in_dim(
-                pn, rrow - start, 1, axis=0
-            )[0, :]
-
-        prevd = cur * sw
-        cur = pn
+    cur, prevd = _trapezoid_k_steps(
+        cur, prevd, vw, sw, srcv_ref, srcp_ref, tr_ref,
+        start=start, row0=row0, win=win, nx=nx, bz=bz, k=k, rrow=rrow,
+    )
 
     p_out_ref[...] = jax.lax.dynamic_slice_in_dim(cur, off, bz, axis=0)
     pp_out_ref[...] = jax.lax.dynamic_slice_in_dim(prevd, off, bz, axis=0)
@@ -299,6 +416,149 @@ def wave_block_pallas(
         out_specs=[strip, strip, pl.BlockSpec((k, nx), lambda i: (0, 0))],
         out_shape=out_shape,
         interpret=interpret,
+    )(p, p_prev, v2dt2, sponge, srcv, srcp)
+
+
+def _wave_block_stream_kernel(
+    p_hbm, pp_hbm, v_hbm, s_hbm, srcv_ref, srcp_ref,
+    p_out_ref, pp_out_ref, tr_ref, win_buf, sems,
+    *, bz: int, win: int, k: int, rrow: int,
+):
+    """STREAMED k-step trapezoid: manual double-buffered window DMA.
+
+    The four fields stay in HBM (``memory_space=ANY``); each grid step
+    owns a (bz, NX) strip and computes on a (win, NX) haloed window that
+    it DMAs into one of two VMEM slots.  Grid step i starts the fetch of
+    strip i+1's window into the OTHER slot before waiting on its own, so
+    the next window flies over this strip's k-step compute — the manual
+    analogue of the pipelined-BlockSpec prefetch the resident kernel
+    gets for free, without requiring the whole field to fit in VMEM
+    (DESIGN.md §15).  Trapezoid math is ``_trapezoid_k_steps``, shared
+    with the resident kernel."""
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+    nz = p_hbm.shape[0]
+    nx = p_hbm.shape[1]
+    fields = (p_hbm, pp_hbm, v_hbm, s_hbm)
+
+    def win_start(strip):
+        return jnp.clip(strip * bz - k * HALO, 0, nz - win)
+
+    def dma(slot, strip):
+        start = win_start(strip)
+        return [
+            pltpu.make_async_copy(
+                f.at[pl.ds(start, win), :],
+                win_buf.at[slot, fi],
+                sems.at[slot, fi],
+            )
+            for fi, f in enumerate(fields)
+        ]
+
+    @pl.when(i == 0)                 # warm-up: fetch our own window
+    def _warmup():
+        for c in dma(0, 0):
+            c.start()
+
+    @pl.when(i + 1 < n)              # prefetch next strip's window
+    def _prefetch():
+        for c in dma((i + 1) % 2, i + 1):
+            c.start()
+
+    slot = i % 2
+    for c in dma(slot, i):           # wait for our window to land
+        c.wait()
+
+    row0 = i * bz
+    start = win_start(i)
+    off = row0 - start               # strip offset inside the window
+    cur, prevd = _trapezoid_k_steps(
+        win_buf[slot, 0], win_buf[slot, 1],
+        win_buf[slot, 2], win_buf[slot, 3],
+        srcv_ref, srcp_ref, tr_ref,
+        start=start, row0=row0, win=win, nx=nx, bz=bz, k=k, rrow=rrow,
+    )
+    p_out_ref[...] = jax.lax.dynamic_slice_in_dim(cur, off, bz, axis=0)
+    pp_out_ref[...] = jax.lax.dynamic_slice_in_dim(prevd, off, bz, axis=0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("receiver_row", "bz", "interpret", "vmem_budget"),
+)
+def wave_block_stream_pallas(
+    p: jax.Array,          # (NZ, NX) f32
+    p_prev: jax.Array,     # (NZ, NX), already sponge-damped
+    v2dt2: jax.Array,
+    sponge: jax.Array,
+    src_vals: jax.Array,   # (k,) source amplitude per inner step
+    src_z,                 # scalar int source row
+    src_x,                 # scalar int source column
+    *,
+    receiver_row: int = 0,
+    bz: int | None = None,
+    interpret: bool | None = None,
+    vmem_budget: int | None = None,
+):
+    """k fused timesteps, STREAMED: VMEM holds two haloed windows, not
+    the field (k = src_vals.shape[0]).
+
+    The production-scale form of ``wave_block_pallas``: fields live in
+    HBM and each grid step double-buffer-DMAs its (bz + 2·k·HALO, NX)
+    window while the previous strip computes, so capacity is O(bz·NX)
+    — a 4096² grid (256 MB resident) streams in ~8 MB of VMEM.  Strip
+    height defaults to ``pick_bz_stream`` (raises rather than fall back
+    to a whole-height resident strip).  Returns
+    (p_k, p_prev_damped_k, traces (k, NX)); same accuracy contract as
+    the resident Pallas kernel (allclose vs ``wave_block_ref``; the
+    bitwise strip-tiled oracle is ``ref.wave_block_strips_ref``)."""
+    nz, nx = p.shape
+    k = int(src_vals.shape[0])
+    if interpret is None:
+        interpret = default_interpret()
+    if bz is None:
+        bz = pick_bz_stream(nz, nx, k, vmem_budget=vmem_budget)
+    budget = vmem_budget if vmem_budget is not None else DEFAULT_VMEM_BUDGET
+    win = bz + 2 * k * HALO
+    assert nz % bz == 0, (nz, bz)
+    assert win <= nz, (nz, bz, k)    # no whole-height fallback, ever
+    assert stream_vmem_bytes(nz, nx, bz, k) <= budget, (nz, nx, bz, k)
+    grid = (nz // bz,)
+    hbm = pl.BlockSpec(memory_space=pltpu.ANY)
+    strip = pl.BlockSpec((bz, nx), lambda i: (i, 0))
+    srcv = src_vals.reshape(1, k).astype(p.dtype)
+    srcp = jnp.stack(
+        [jnp.asarray(src_z, jnp.int32), jnp.asarray(src_x, jnp.int32)]
+    ).reshape(1, 2)
+    out_shape = [
+        jax.ShapeDtypeStruct((nz, nx), p.dtype),
+        jax.ShapeDtypeStruct((nz, nx), p.dtype),
+        jax.ShapeDtypeStruct((k, nx), p.dtype),
+    ]
+    kwargs = {}
+    if not interpret:
+        # enforce the budget at compile time on real TPUs; interpret
+        # mode has no VMEM, the assert above carries the contract
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            vmem_limit_bytes=budget
+        )
+    return pl.pallas_call(
+        functools.partial(
+            _wave_block_stream_kernel, bz=bz, win=win, k=k,
+            rrow=int(receiver_row),
+        ),
+        grid=grid,
+        in_specs=[hbm, hbm, hbm, hbm,
+                  pl.BlockSpec((1, k), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 2), lambda i: (0, 0))],
+        out_specs=[strip, strip, pl.BlockSpec((k, nx), lambda i: (0, 0))],
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((2, 4, win, nx), p.dtype),
+            pltpu.SemaphoreType.DMA((2, 4)),
+        ],
+        interpret=interpret,
+        **kwargs,
     )(p, p_prev, v2dt2, sponge, srcv, srcp)
 
 
@@ -377,11 +637,55 @@ def _autotune_bz_k_cached(
     return best
 
 
+@functools.lru_cache(maxsize=None)
+def _autotune_stream_cached(
+    nz: int, nx: int, bz_candidates: tuple[int, ...],
+    k_candidates: tuple[int, ...], repeats: int, backend: str,
+    budget: int,
+) -> tuple[int, int]:
+    key = jax.random.key(0)
+    p = jax.random.normal(key, (nz, nx), jnp.float32)
+    v = jnp.full((nz, nx), 0.1, jnp.float32)
+    s = jnp.ones((nz, nx), jnp.float32)
+    best, best_t = None, float("inf")
+    for k in k_candidates:
+        srcv = jnp.zeros((k,), jnp.float32)
+        bzs = [b for b in bz_candidates
+               if nz % b == 0 and b + 2 * k * HALO <= nz
+               and stream_vmem_bytes(nz, nx, b, k) <= budget]
+        if not bzs:
+            try:
+                bzs = [pick_bz_stream(nz, nx, k, vmem_budget=budget)]
+            except ValueError:
+                continue                      # no streamable strip at this k
+        for b in bzs:
+            out = wave_block_stream_pallas(
+                p, p, v, s, srcv, 0, 0, bz=b, vmem_budget=budget
+            )
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                out = wave_block_stream_pallas(
+                    p, p, v, s, srcv, 0, 0, bz=b, vmem_budget=budget
+                )
+            jax.block_until_ready(out)
+            dt = (time.perf_counter() - t0) / (repeats * k)   # per step
+            if dt < best_t:
+                best, best_t = (b, k), dt
+    if best is None:
+        raise ValueError(
+            f"no (bz, k) candidate streams nz={nz}, nx={nx} under "
+            f"vmem_budget={budget}"
+        )
+    return best
+
+
 def autotune_bz_k(
     nz: int, nx: int,
     bz_candidates: tuple[int, ...] = (8, 16, 24, 32, 40, 64, 120, 128),
     k_candidates: tuple[int, ...] = (1, 2, 4, 8),
     repeats: int = 3, backend: str | None = None,
+    *, stream: bool | None = None, vmem_budget: int | None = None,
 ) -> tuple[int, int]:
     """Jointly tune (strip height, fused-block length) for ``wave_block``.
 
@@ -389,7 +693,21 @@ def autotune_bz_k(
     when the extra trapezoid compute pays for the saved round trips.
     Memoized per (shape, candidates, backend) in-process — repeated
     ``FWISession`` rebuilds after a RESHARD reuse the cached pair
-    instead of re-timing (DESIGN.md §13)."""
+    instead of re-timing (DESIGN.md §13).
+
+    ``stream`` switches the search to the STREAMED kernel's (strip,
+    depth) space, where candidates must also fit ``vmem_budget``
+    (``stream_vmem_bytes``); ``stream=None`` auto-selects via
+    ``should_stream`` — grids whose resident design would blow the
+    budget tune the streamed kernel (DESIGN.md §15)."""
+    budget = vmem_budget if vmem_budget is not None else DEFAULT_VMEM_BUDGET
+    if stream is None:
+        stream = should_stream(nz, nx, vmem_budget=budget)
+    if stream:
+        return _autotune_stream_cached(
+            nz, nx, tuple(bz_candidates), tuple(k_candidates), repeats,
+            _tune_backend(backend), budget,
+        )
     return _autotune_bz_k_cached(
         nz, nx, tuple(bz_candidates), tuple(k_candidates), repeats,
         _tune_backend(backend),

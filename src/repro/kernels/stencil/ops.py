@@ -27,17 +27,26 @@ from repro.kernels.stencil.kernel import (
     default_interpret,
     pick_bz,
     pick_bz_block,
+    pick_bz_stream,
     pick_k,
+    should_stream,
     wave_block_pallas,
+    wave_block_stream_pallas,
     wave_step_pallas,
 )
-from repro.kernels.stencil.ref import wave_block_ref, wave_step_ref
+from repro.kernels.stencil.ref import (
+    wave_block_ref,
+    wave_block_strips_ref,
+    wave_step_ref,
+)
 
 __all__ = [
     "wave_step", "wave_step_jit", "wave_step_pallas",
     "wave_block", "wave_block_jit", "wave_block_pallas",
+    "wave_block_stream_pallas", "wave_block_strips_ref",
     "autotune_bz", "autotune_bz_k", "default_interpret",
-    "pick_bz", "pick_bz_block", "pick_k",
+    "pick_bz", "pick_bz_block", "pick_bz_stream", "pick_k",
+    "should_stream",
 ]
 
 
@@ -58,16 +67,46 @@ wave_step_jit = jax.jit(
 
 def wave_block(p, p_prev, v2dt2, sponge, src_vals, src_z, src_x, *,
                receiver_row: int = 0, use_pallas: bool = False,
-               bz: int | None = None, interpret: bool | None = None):
+               bz: int | None = None, interpret: bool | None = None,
+               stream: bool | None = None,
+               vmem_budget: int | None = None):
     """k fused timesteps; returns (p_k, p_prev_damped_k, traces (k, NX)).
 
     ``p_prev`` follows the engine convention: it is the already
     sponge-damped previous field, and the returned second output is the
-    damped p_{k-1} — the (p, p_prev) carry the scan runners thread."""
+    damped p_{k-1} — the (p, p_prev) carry the scan runners thread.
+
+    ``stream`` selects the STREAMED tiling for production-scale grids
+    (DESIGN.md §15): ``None`` auto-streams when the whole-array
+    resident design would blow ``vmem_budget`` (``should_stream``).  On
+    the Pallas path that is ``wave_block_stream_pallas`` (double-
+    buffered window DMA); on the pure-XLA path it is
+    ``wave_block_strips_ref``, the strip-tiled mirror that stays
+    BIT-IDENTICAL to ``wave_block_ref`` while bounding the per-strip
+    working set — so both backends share one capacity story."""
+    k = int(src_vals.shape[0])
+    if stream is None:
+        nz, nx = p.shape[-2], p.shape[-1]
+        stream = should_stream(nz, nx, k, vmem_budget=vmem_budget)
     if use_pallas:
+        if stream:
+            return wave_block_stream_pallas(
+                p, p_prev, v2dt2, sponge, src_vals, src_z, src_x,
+                receiver_row=receiver_row, bz=bz, interpret=interpret,
+                vmem_budget=vmem_budget,
+            )
         return wave_block_pallas(
             p, p_prev, v2dt2, sponge, src_vals, src_z, src_x,
             receiver_row=receiver_row, bz=bz, interpret=interpret,
+        )
+    if stream:
+        nz, nx = p.shape[-2], p.shape[-1]
+        sbz = bz if bz is not None else pick_bz_stream(
+            nz, nx, k, vmem_budget=vmem_budget
+        )
+        return wave_block_strips_ref(
+            p, p_prev, v2dt2, sponge, src_vals, src_z, src_x,
+            receiver_row=receiver_row, bz=sbz,
         )
     return wave_block_ref(
         p, p_prev, v2dt2, sponge, src_vals, src_z, src_x,
@@ -77,5 +116,6 @@ def wave_block(p, p_prev, v2dt2, sponge, src_vals, src_z, src_x, *,
 
 wave_block_jit = jax.jit(
     wave_block,
-    static_argnames=("receiver_row", "use_pallas", "bz", "interpret"),
+    static_argnames=("receiver_row", "use_pallas", "bz", "interpret",
+                     "stream", "vmem_budget"),
 )

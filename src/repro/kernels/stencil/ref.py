@@ -165,3 +165,79 @@ def wave_block_ref(
         ppad = jax.lax.dynamic_update_slice(ppad, pn, (_PAD, _PAD))
     return (ppad[_PAD: _PAD + nz, _PAD: _PAD + nx], prevd,
             jnp.stack(traces))
+
+
+def wave_block_strips_ref(
+    p: jnp.ndarray,        # (NZ, NX) current pressure
+    p_prev: jnp.ndarray,   # (NZ, NX) previous, already sponge-damped
+    v2dt2: jnp.ndarray,    # (NZ, NX)
+    sponge: jnp.ndarray,   # (NZ, NX)
+    src_vals: jnp.ndarray,  # (k,) source amplitude per inner step
+    src_z,                 # scalar int source row
+    src_x,                 # scalar int source column
+    *,
+    receiver_row: int = 0,
+    bz: int,
+):
+    """``wave_block_ref`` re-tiled over z-strips — the XLA mirror of the
+    STREAMED kernel's schedule, BIT-IDENTICAL to ``wave_block_ref``.
+
+    Each of the nz/bz strips computes its k steps on a
+    ``win = bz + 2·k·HALO`` haloed window (start clamped into the field,
+    exactly the kernel's trapezoid), vmapped over strips so the working
+    set per strip is O(win·NX) regardless of NZ.  Zero-extending a
+    window seeds wrong values at interior window edges whose influence
+    creeps inward HALO rows per step; the clamp keeps every owned strip
+    ≥ k·HALO rows from any interior edge, so after k steps the owned
+    rows are untouched by the creep — and since slicing commutes with
+    elementwise ops and the Laplacian accumulates in the same order as
+    ``laplacian_of_padded`` on the full field, the owned rows are
+    bitwise equal to the unstripped reference.  This is the streamed
+    path's bit-exactness oracle (DESIGN.md §15): the Pallas streamed
+    kernel matches to its documented stencil-reorder `allclose`, this
+    mirror matches ``wave_block_ref`` exactly."""
+    k = src_vals.shape[0]
+    nz, nx = p.shape[-2], p.shape[-1]
+    assert nz % bz == 0, (nz, bz)
+    win = min(bz + 2 * k * _PAD, nz)
+    n = nz // bz
+    starts = [min(max(i * bz - k * _PAD, 0), nz - win) for i in range(n)]
+    offs = [i * bz - starts[i] for i in range(n)]    # strip offset in window
+    sidx = jnp.asarray(starts, jnp.int32)
+    oidx = jnp.asarray(offs, jnp.int32)
+
+    def windows(a):
+        return jax.vmap(
+            lambda s: jax.lax.dynamic_slice_in_dim(a, s, win, axis=0)
+        )(sidx)
+
+    prevd = windows(p_prev)
+    vw = windows(v2dt2)
+    sw = windows(sponge)
+    ppad = jnp.pad(windows(p), ((0, 0), (_PAD, _PAD), (_PAD, _PAD)))
+    ow = receiver_row // bz                          # receiver-owning strip
+    zi = jnp.asarray(src_z, jnp.int32) - sidx        # (n,) in-window src row
+    inb = (zi >= 0) & (zi < win)
+    zidx = jnp.clip(zi, 0, win - 1)
+    traces = []
+    for j in range(k):
+        cur = ppad[:, _PAD: _PAD + win, _PAD: _PAD + nx]
+        lap = laplacian_of_padded(ppad, win, nx)
+        pn = (2.0 * cur - prevd + vw * lap) * sw
+        # every window containing the source row injects (neighbors need
+        # it too — its influence creeps into their owned strip); masked
+        # zero-adds land only on dirty halo rows, never owned ones
+        amt = jnp.where(inb, src_vals[j], jnp.zeros((), pn.dtype))
+        pn = jax.vmap(lambda f, z, a: f.at[z, src_x].add(a))(pn, zidx, amt)
+        traces.append(pn[ow, receiver_row - starts[ow], :])
+        prevd = cur * sw
+        ppad = jax.lax.dynamic_update_slice(ppad, pn, (0, _PAD, _PAD))
+
+    def owned(w, off):                               # (win, nx) -> (bz, nx)
+        return jax.lax.dynamic_slice_in_dim(w, off, bz, axis=0)
+
+    p_out = jax.vmap(owned)(
+        ppad[:, _PAD: _PAD + win, _PAD: _PAD + nx], oidx
+    ).reshape(nz, nx)
+    pp_out = jax.vmap(owned)(prevd, oidx).reshape(nz, nx)
+    return p_out, pp_out, jnp.stack(traces)

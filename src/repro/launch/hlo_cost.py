@@ -712,6 +712,14 @@ class HloCostModel:
         if op.opcode in _SKIP_BYTES_OPS:
             return
 
+        if op.opcode in ("convert", "copy", "transpose", "reshape"):
+            # Bare layout/precision staging.  Single-core CPU XLA emits
+            # these unfused at ENTRY level (multi-core hosts wrap them in
+            # %parallel_* calls, zero-charged above); consumers already
+            # resolve through the chain to the source width, so charging
+            # here would double-count traffic the TPU never issues.
+            return
+
         if op.opcode == "dynamic-update-slice":
             # in-place in practice: traffic = update slice (read + write)
             upd = (
