@@ -1,0 +1,130 @@
+"""Policy × scheduler × scenario tournament of the fleet layer
+(DESIGN.md §16).
+
+Runs every placement Scheduler against every (per-job policy,
+fleet-pool policy) pairing on the queued multi-tenant scenarios and
+scores each cell on the three axes the multi-tenant story adds to the
+paper's single-job trade-off:
+
+  deadline-hit-rate   fraction of jobs finishing inside their deadline
+  cloud cost          $ for elastic + pool chip-hours actually held
+  fairness            mean demand-bounded min weighted share over the
+                      contended window (allocator.min_weighted_share)
+
+Acceptance (also asserted by CI on the smoke grid): at least one
+deadline-aware (scheduler, policy) pair must beat the FIFO + no-burst
+discipline baseline on hit-rate while spending less than FIFO +
+always-burst — the paper's §3.3 claim lifted to fleet scale.
+
+The default grid is the CI smoke (3 schedulers × 3 policy pairs ×
+2 scenarios, tens of jobs, a few seconds).  ``run_big()`` — the
+``--big`` / ``fleet_tournament_big`` tier — replays the rush world
+with 1000+ concurrent jobs through the full scheduler grid, which is
+minutes of simulated fleet time but still seconds of wall time per
+cell.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.sim import POLICY_FACTORIES, FleetSim
+from repro.sim.scenarios import multi_tenant_rush, queued_scenarios
+
+SEED = 0
+
+#: CI smoke grid: 3 schedulers × 3 (policy, fleet-policy) pairs
+SCHEDULERS = ("fifo", "fill", "best-fit")
+PAIRS = (
+    ("no-burst", "none"),        # discipline baseline
+    ("react", "adapt"),          # deadline-aware, rate-controlled pool
+    ("always-burst", "adapt"),   # spend ceiling
+)
+
+#: full grids for the big tier
+SCHEDULERS_BIG = ("fifo", "fill", "best-fit", "worst-fit")
+PAIRS_BIG = PAIRS + (("plan", "reg"), ("react", "token"),
+                     ("react", "conpaas"))
+
+
+def tournament(
+    scenarios, schedulers=SCHEDULERS, pairs=PAIRS, seed: int = SEED
+) -> dict[tuple[str, str, str, str], object]:
+    out = {}
+    for sc in scenarios:
+        for sched in schedulers:
+            for pol, fp in pairs:
+                rec = FleetSim(
+                    sc, POLICY_FACTORIES[pol], seed=seed,
+                    scheduler=sched, fleet_policy=fp,
+                ).run()
+                out[(sc.name, sched, pol, fp)] = rec
+    return out
+
+
+def _rows(recs: dict, prefix: str, dt_us: float) -> list[str]:
+    n = max(len(recs), 1)
+    rows = [f"{prefix}.cells,{dt_us / n:.0f},{n}"]
+    for (sc, sched, pol, fp), r in sorted(recs.items()):
+        rows.append(
+            f"{prefix}.{sc}.{sched}.{pol}+{fp},{dt_us / n:.0f},"
+            f"hit={r.hit_rate:.2f};cost={r.cloud_cost:.2f};"
+            f"fair={r.fairness:.3f};wait_s={r.mean_wait_s:.0f};"
+            f"pool_cost={r.pool_cost:.2f};makespan_s={r.makespan_s:.0f}"
+        )
+    return rows
+
+
+def _acceptance(recs: dict, prefix: str, scenario: str,
+                dt_us: float, n: int) -> list[str]:
+    """The §3.3 claim at fleet scale: some deadline-aware cell beats
+    the FIFO discipline baseline on hit-rate AND spends less than the
+    FIFO spend ceiling, on the overload scenario."""
+    base = recs[(scenario, "fifo", "no-burst", "none")]
+    ceil = recs[(scenario, "fifo", "always-burst", "adapt")]
+    aware = [
+        r for (sc, sched, pol, fp), r in recs.items()
+        if sc == scenario and pol not in ("no-burst", "always-burst")
+    ]
+    wins = [
+        r for r in aware
+        if r.hit_rate > base.hit_rate and r.cloud_cost < ceil.cloud_cost
+    ]
+    return [
+        f"{prefix}.aware_beats_fifo_noburst,{dt_us / n:.0f},"
+        f"{int(bool(wins))}",
+        f"{prefix}.jobs_conserved,{dt_us / n:.0f},"
+        + str(int(all(
+            all(j.state in ("finished", "running", "queued")
+                for j in r.jobs)
+            for r in recs.values()
+        ))),
+    ]
+
+
+def run() -> list[str]:
+    t0 = time.perf_counter()
+    recs = tournament(queued_scenarios(SEED))
+    dt_us = (time.perf_counter() - t0) * 1e6
+    rows = _rows(recs, "fleet_tournament", dt_us)
+    rows += _acceptance(recs, "fleet_tournament", "multi_tenant_rush",
+                        dt_us, len(recs))
+    return rows
+
+
+def run_big() -> list[str]:
+    """Thousand-job tier: the same rush world with n_jobs=1000 (all in
+    flight — queued, running, or bursting — while the rush lasts)."""
+    sc = multi_tenant_rush(
+        SEED, n_jobs=1000, rate_per_hour=1200.0, budget_usd=6000.0,
+    )
+    t0 = time.perf_counter()
+    recs = tournament([sc], SCHEDULERS_BIG, PAIRS_BIG)
+    dt_us = (time.perf_counter() - t0) * 1e6
+    rows = _rows(recs, "fleet_tournament_big", dt_us)
+    rows += _acceptance(recs, "fleet_tournament_big",
+                        "multi_tenant_rush", dt_us, len(recs))
+    rows.append(
+        f"fleet_tournament_big.n_jobs,{dt_us / len(recs):.0f},"
+        f"{len(sc.jobs)}"
+    )
+    return rows

@@ -12,6 +12,10 @@
                           loop; HBM launch-boundary proxy
   bench_fleet_scenarios — autoscaler policy suite × fleet scenarios
                           (hit-rate / cloud cost / useful-work frac)
+  bench_fleet_tournament— policy × scheduler × scenario tournament of
+                          the multi-tenant queue layer (hit-rate /
+                          cloud $ / fairness); ``--big`` adds the
+                          thousand-job tier
   bench_real_elastic    — sim-vs-real elastic loop: the same squeeze
                           scenario through FleetSim and the real
                           orchestrator+FWISession; cost-aware vs
@@ -53,6 +57,7 @@ from benchmarks import (  # noqa: E402
     bench_capacity_fit,
     bench_envs,
     bench_fleet_scenarios,
+    bench_fleet_tournament,
     bench_fused_scan,
     bench_gamma_fit,
     bench_kernels,
@@ -67,12 +72,19 @@ class _BigFusedScan:
     run = staticmethod(bench_fused_scan.run_big)
 
 
+class _BigFleetTournament:
+    """`--big` tier shim: thousand-job tournament (run_big())."""
+
+    run = staticmethod(bench_fleet_tournament.run_big)
+
+
 BENCHES = [
     ("envs", bench_envs),
     ("capacity_fit", bench_capacity_fit),
     ("gamma_fit", bench_gamma_fit),
     ("burst_deadline", bench_burst_deadline),
     ("fleet_scenarios", bench_fleet_scenarios),
+    ("fleet_tournament", bench_fleet_tournament),
     ("real_elastic", bench_real_elastic),
     ("overheads", bench_overheads),
     ("kernels", bench_kernels),
@@ -110,6 +122,8 @@ def main(argv: list[str] | None = None) -> None:
     benches = list(BENCHES)
     if args.big or "fused_scan_big" in only:
         benches.append(("fused_scan_big", _BigFusedScan))
+    if args.big or "fleet_tournament_big" in only:
+        benches.append(("fleet_tournament_big", _BigFleetTournament))
     unknown = only - {name for name, _ in benches}
     if unknown:
         ap.error(f"unknown bench(es): {sorted(unknown)}")

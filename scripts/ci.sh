@@ -16,6 +16,15 @@
 #    the paper's claim at fleet scale — the deadline-aware policy beats
 #    no-burst on hit-rate in the overload scenario at lower cost than
 #    always-burst, and retires the cloud pod once a spike clears.
+# 5b. fleet-tournament smoke: the policy × scheduler × scenario grid
+#    of the multi-tenant queue layer (DESIGN.md §16) must uphold the
+#    §3.3 claim at fleet scale — some deadline-aware (scheduler,
+#    policy) cell beats FIFO+no-burst on hit-rate while spending less
+#    than FIFO+always-burst on the overload scenario — and conserve
+#    every queued job.
+# 5c. sim coverage floor: the repro.sim package must keep >=90%
+#    statement coverage from its own test modules (pytest-cov when
+#    installed, stdlib `trace` fallback otherwise — scripts/simcov.py).
 # 6. real-elastic smoke: a small FWI config driven by the `react`
 #    policy through the real orchestrator (2 host devices) must apply
 #    at least one GROW and one RETIRE through real re-striping and keep
@@ -154,6 +163,31 @@ assert derived("fleet.overload_plan_cheaper_than_always") == "1", \
 assert derived("fleet.spike_cloud_retired_at_end") == "1", \
     "cloud pod must be retired once the transient spike clears"
 EOF
+
+echo "== fleet-tournament smoke =="
+python - <<'EOF'
+import sys
+sys.path.insert(0, ".")
+from benchmarks import bench_fleet_tournament
+
+rows = bench_fleet_tournament.run()
+for r in rows:
+    print(r)
+
+def derived(name):
+    return next(
+        r.rsplit(",", 1)[1] for r in rows if r.startswith(name)
+    )
+
+assert derived("fleet_tournament.aware_beats_fifo_noburst") == "1", \
+    "some deadline-aware (scheduler, policy) cell must beat " \
+    "FIFO+no-burst on hit-rate at lower cloud $ than FIFO+always-burst"
+assert derived("fleet_tournament.jobs_conserved") == "1", \
+    "every submitted job must end finished/running/queued in every cell"
+EOF
+
+echo "== sim coverage floor =="
+python scripts/simcov.py
 
 echo "== real-elastic smoke =="
 python - <<'EOF'

@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Statement-coverage floor for the ``repro.sim`` package.
+
+CI gates the fleet layer (DESIGN.md §16) on a minimum statement
+coverage from its own test modules.  When ``pytest-cov`` is installed
+this delegates to ``pytest --cov=repro.sim --cov-fail-under``;
+otherwise (the default container has no coverage tooling) it falls
+back to the stdlib ``trace`` module: run the fleet test modules under
+a line tracer, intersect the executed lines with each sim module's
+executable lines, and enforce the same floor.
+
+Usage:  PYTHONPATH=src python scripts/simcov.py [--floor PCT]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+SIM_DIR = ROOT / "src" / "repro" / "sim"
+#: fleet-layer test modules — fast, pure-Python, exercise repro.sim
+TESTS = ["tests/test_fleet.py", "tests/test_fleet_properties.py"]
+DEFAULT_FLOOR = 90.0
+
+
+def _have_pytest_cov() -> bool:
+    try:
+        import pytest_cov  # noqa: F401
+    except ModuleNotFoundError:
+        return False
+    return True
+
+
+def _run_with_pytest_cov(floor: float) -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    cmd = [
+        sys.executable, "-m", "pytest", "-q",
+        "--cov=repro.sim", f"--cov-fail-under={floor:g}", *TESTS,
+    ]
+    return subprocess.call(cmd, cwd=ROOT, env=env)
+
+
+def _run_with_trace(floor: float) -> int:
+    import trace
+
+    import pytest
+
+    os.chdir(ROOT)
+    sys.path.insert(0, str(ROOT / "src"))
+    # NB: no ignoredirs — trace._Ignore caches decisions by bare module
+    # name, so ignoring stdlib ``queue.py``/``__init__.py`` would also
+    # silently ignore repro/sim/queue.py and repro/sim/__init__.py
+    tracer = trace.Trace(count=1, trace=0)
+    rc = tracer.runfunc(
+        pytest.main, ["-q", "-p", "no:cacheprovider", *TESTS]
+    )
+    if rc not in (0,):
+        print(f"simcov: test run failed (exit {rc})", file=sys.stderr)
+        return int(rc)
+
+    executed: dict[str, set[int]] = {}
+    for (fn, lineno), cnt in tracer.results().counts.items():
+        if cnt > 0:
+            executed.setdefault(os.path.abspath(fn), set()).add(lineno)
+
+    tot_hit = tot_exec = 0
+    print(f"{'module':<28}{'stmts':>7}{'hit':>7}{'cover':>8}")
+    for py in sorted(SIM_DIR.glob("*.py")):
+        fn = str(py.resolve())
+        # executable line numbers straight from the code objects — the
+        # same analysis `trace --count --missing` reports against
+        lnos = set(trace._find_executable_linenos(fn))
+        hit = executed.get(fn, set()) & lnos
+        pct = 100.0 * len(hit) / len(lnos) if lnos else 100.0
+        tot_hit += len(hit)
+        tot_exec += len(lnos)
+        print(f"{py.name:<28}{len(lnos):>7}{len(hit):>7}{pct:>7.1f}%")
+    total_pct = 100.0 * tot_hit / tot_exec if tot_exec else 100.0
+    print(f"{'TOTAL':<28}{tot_exec:>7}{tot_hit:>7}{total_pct:>7.1f}%")
+    if total_pct < floor:
+        print(
+            f"simcov: repro.sim coverage {total_pct:.1f}% is below the "
+            f"{floor:g}% floor", file=sys.stderr,
+        )
+        return 1
+    print(f"simcov OK: repro.sim {total_pct:.1f}% >= {floor:g}% floor")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--floor", type=float, default=DEFAULT_FLOOR)
+    args = ap.parse_args(argv)
+    if _have_pytest_cov():
+        return _run_with_pytest_cov(args.floor)
+    return _run_with_trace(args.floor)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,6 +7,8 @@ from repro.core.allocator import (
     PodShare,
     conservation_ok,
     heterogeneous_split,
+    max_min_fair_allocation,
+    min_weighted_share,
     proportional_shares,
 )
 from repro.core.capacity import (
@@ -14,6 +16,7 @@ from repro.core.capacity import (
     ThroughputModel,
     burst_cores,
     correction_factor,
+    floor_to_legal_slice,
     legal_step_down,
     legal_step_up,
     round_to_legal_slice,
@@ -59,9 +62,12 @@ __all__ = [
     "conservation_ok",
     "correction_factor",
     "elastic_chips",
+    "floor_to_legal_slice",
     "heterogeneous_split",
     "legal_step_down",
     "legal_step_up",
+    "max_min_fair_allocation",
+    "min_weighted_share",
     "proportional_shares",
     "round_to_legal_slice",
     "split_gamma",

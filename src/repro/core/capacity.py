@@ -119,6 +119,19 @@ def round_to_legal_slice(c_n: float, legal: Sequence[int]) -> int:
     return max(legal)
 
 
+def floor_to_legal_slice(c_n: float, legal: Sequence[int]) -> int:
+    """Round the fractional chip grant DOWN to the nearest legal slice.
+
+    The fleet controller's budget arbitration hands each competing
+    grow request its max-min fair share of the remaining headroom;
+    the share only becomes a provisionable pod at a legal slice shape,
+    and rounding *up* would overspend the cap — so grants floor
+    (0 means the request is denied this interval, DESIGN.md §16).
+    """
+    fit = [s for s in sorted(legal) if s <= c_n]
+    return fit[-1] if fit else 0
+
+
 def legal_step_up(current: int, legal: Sequence[int]) -> int:
     """Next legal slice strictly above `current` (max slice if at top).
 

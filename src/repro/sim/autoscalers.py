@@ -20,10 +20,24 @@ suite) and two brackets:
 Every policy answers with a ScaleAction; the orchestrator/fleet applies
 it through the identical CHECKPOINT → REMESH → RESHARD → RESUME path, so
 policies differ only in *when* and *how much* — never in mechanism.
+
+Fleet-level policies (DESIGN.md §16): a second, queue-driven level on
+top of the per-job suite.  A FleetAutoscaler sees the *fleet* signals —
+queue depth, queued work, aggregate predicted lateness of the running
+jobs — and answers with a target for the fleet's total cloud footprint
+(held + staged + pooled chips).  The FleetController converges the
+pre-provisioned pool toward that target, so queued jobs can start on
+cloud chips (VM-MAD's queue-driven cluster expansion) and late jobs can
+draw a slice without paying the provisioning delay.  The variants port
+the OpenDC prototype zoo: ``adapt`` is the estimator/controller pair
+from SNIPPETS.md, ``reg`` a regression forecaster, ``conpaas`` a
+percentile provisioner, ``token`` a budget-paced token bucket.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
+from typing import Protocol
 
 from repro.core.capacity import (
     legal_step_down,
@@ -41,10 +55,17 @@ from repro.core.orchestrator import (
 __all__ = [
     "AutoscalerPolicy",
     "AlwaysBurstAutoscaler",
+    "AdaptFleetAutoscaler",
+    "ConpaasFleetAutoscaler",
+    "FLEET_POLICY_FACTORIES",
+    "FleetAutoscaler",
+    "FleetContext",
     "HistAutoscaler",
     "NoBurstAutoscaler",
     "PlanAutoscaler",
     "ReactAutoscaler",
+    "RegFleetAutoscaler",
+    "TokenFleetAutoscaler",
     "POLICY_FACTORIES",
 ]
 
@@ -273,4 +294,200 @@ POLICY_FACTORIES = {
     "react": ReactAutoscaler,
     "hist": HistAutoscaler,
     "plan": PlanAutoscaler,
+}
+
+
+# ===================================================================== #
+#  Fleet-level (queue-driven) policies — DESIGN.md §16                  #
+# ===================================================================== #
+
+
+@dataclasses.dataclass
+class FleetContext:
+    """Fleet signals a queue-driven policy may look at each interval."""
+
+    now: float
+    interval_s: float
+    queue_depth: int
+    queued_chips: int              # Σ chips requested by waiting jobs
+    queued_work_chip_s: float      # Σ remaining work of waiting jobs
+    running: int                   # admitted, unfinished jobs
+    late_jobs: int                 # running jobs predicting a miss
+    lateness_s: float              # Σ max(0, −slack) over running jobs
+    cloud_committed: int           # held + staged + pooled chips
+    pool_free: int                 # provisioned, unattached pool chips
+    legal: list[int]
+    site_free: int
+    budget_left_usd: float         # ∞ when uncapped
+    price_per_chip_hour: float
+    cloud_slowdown: float = 1.4
+
+
+class FleetAutoscaler(Protocol):
+    """Queue-driven capacity policy: answers with the desired TOTAL
+    fleet cloud footprint (held + staged + pooled chips).  The
+    controller grows/shrinks the pre-provisioned pool toward it."""
+
+    name: str
+
+    def target(self, ctx: FleetContext) -> int: ...
+
+
+def _demand_chips(ctx: FleetContext) -> float:
+    """The raw demand signal every fleet variant filters: cloud chips
+    that would (a) host the queued work the site has no room for and
+    (b) erase the running jobs' aggregate predicted lateness within
+    roughly one evaluation interval."""
+    overflow = max(ctx.queued_chips - ctx.site_free, 0)
+    hosting = overflow * ctx.cloud_slowdown
+    # chip·s of extra capacity needed to claw back the lateness in ~one
+    # interval, charged at the provider's K
+    rescue = (
+        ctx.lateness_s / max(ctx.interval_s, 1.0) * ctx.cloud_slowdown
+        * (ctx.late_jobs > 0)
+    )
+    return hosting + rescue
+
+
+def _clip_target(ctx: FleetContext, chips: float) -> int:
+    """Round a fractional target to a legal total and respect budget
+    exhaustion (a spent budget can only shrink, never grow)."""
+    if ctx.budget_left_usd <= 0:
+        return min(ctx.cloud_committed, ctx.pool_free)
+    if chips <= 0:
+        return 0
+    target = round_to_legal_slice(chips, ctx.legal)
+    return min(target, max(ctx.legal) * 4)
+
+
+class AdaptFleetAutoscaler:
+    """OpenDC ``adapt``-style estimator/controller (SNIPPETS.md).
+
+    Estimator: smooth the demand signal and its per-interval delta.
+    Controller: the scaling rate R is the smoothed delta damped
+    asymmetrically — scale-downs react an order of magnitude slower
+    than scale-ups (the prototype divides negative R by 15) so a
+    transient lull does not flap the pool.  The target is the current
+    footprint plus R, legal-rounded.
+    """
+
+    name = "adapt"
+
+    def __init__(self, up_gain: float = 1.0, down_damp: float = 8.0):
+        self.up_gain = up_gain
+        self.down_damp = down_damp
+        self._prev_demand: float | None = None
+        self._rate = 0.0
+
+    def target(self, ctx: FleetContext) -> int:
+        demand = _demand_chips(ctx)
+        if self._prev_demand is None:
+            delta = demand - ctx.cloud_committed
+        else:
+            delta = demand - self._prev_demand
+        self._prev_demand = demand
+        if delta >= 0:
+            self._rate = self.up_gain * delta
+        else:
+            self._rate = delta / self.down_damp
+        want = max(ctx.cloud_committed + self._rate, demand * (delta >= 0))
+        return _clip_target(ctx, want)
+
+
+class RegFleetAutoscaler:
+    """Regression forecaster (OpenDC ``reg``): ordinary least squares
+    over the recent (t, demand) history predicts the demand one
+    interval ahead; the pool is provisioned for the forecast, so a
+    diurnal ramp is met *before* the queue actually fills."""
+
+    name = "reg"
+
+    def __init__(self, window: int = 12):
+        self.window = window
+        self._hist: deque[tuple[float, float]] = deque(maxlen=window)
+
+    def target(self, ctx: FleetContext) -> int:
+        demand = _demand_chips(ctx)
+        self._hist.append((ctx.now, demand))
+        if len(self._hist) < 3:
+            return _clip_target(ctx, demand)
+        ts = [t for t, _ in self._hist]
+        ds = [d for _, d in self._hist]
+        n = len(ts)
+        tm = sum(ts) / n
+        dm = sum(ds) / n
+        sxx = sum((t - tm) ** 2 for t in ts)
+        if sxx <= 0:
+            return _clip_target(ctx, demand)
+        slope = sum(
+            (t - tm) * (d - dm) for t, d in zip(ts, ds)
+        ) / sxx
+        forecast = dm + slope * (ctx.now + ctx.interval_s - tm)
+        return _clip_target(ctx, max(forecast, 0.0))
+
+
+class ConpaasFleetAutoscaler:
+    """Percentile provisioner (ConPaaS-style): hold enough pool for the
+    ``pct`` percentile of the recent demand history — robust to spikes
+    (they shift the tail slowly) while still tracking sustained load."""
+
+    name = "conpaas"
+
+    def __init__(self, window: int = 24, pct: float = 0.8):
+        self.window = window
+        self.pct = pct
+        self._hist: deque[float] = deque(maxlen=window)
+
+    def target(self, ctx: FleetContext) -> int:
+        self._hist.append(_demand_chips(ctx))
+        s = sorted(self._hist)
+        want = s[min(int(self.pct * len(s)), len(s) - 1)]
+        return _clip_target(ctx, want)
+
+
+class TokenFleetAutoscaler:
+    """Budget-paced token bucket (OpenDC ``token``): each interval
+    earns tokens worth ``spend_frac`` of the remaining cloud budget's
+    steady-state burn; adding pool capacity spends tokens at the
+    provider's $-rate.  Demand above the current footprint is served
+    only as far as the bucket allows, so the policy *paces* spend over
+    the run instead of blowing the budget on the first rush."""
+
+    name = "token"
+
+    def __init__(self, spend_frac: float = 0.05, horizon_s: float = 3600.0):
+        self.spend_frac = spend_frac
+        self.horizon_s = horizon_s
+        self._tokens_usd = 0.0
+
+    def target(self, ctx: FleetContext) -> int:
+        budget = ctx.budget_left_usd
+        if budget == float("inf"):
+            # uncapped budget: pace against a nominal hourly burn of
+            # one max slice so the bucket still smooths the rush
+            budget = (
+                max(ctx.legal) * ctx.price_per_chip_hour
+            )
+        self._tokens_usd += (
+            self.spend_frac * budget * ctx.interval_s / self.horizon_s
+        )
+        demand = _demand_chips(ctx)
+        grow = max(demand - ctx.cloud_committed, 0.0)
+        if grow <= 0:
+            return _clip_target(ctx, demand)
+        # $ to hold `grow` chips for one horizon-paced hold
+        usd_per_chip = ctx.price_per_chip_hour * ctx.interval_s / 3600.0
+        affordable = (
+            self._tokens_usd / usd_per_chip if usd_per_chip > 0 else grow
+        )
+        granted = min(grow, affordable)
+        self._tokens_usd -= granted * usd_per_chip
+        return _clip_target(ctx, ctx.cloud_committed + granted)
+
+
+FLEET_POLICY_FACTORIES = {
+    "adapt": AdaptFleetAutoscaler,
+    "reg": RegFleetAutoscaler,
+    "conpaas": ConpaasFleetAutoscaler,
+    "token": TokenFleetAutoscaler,
 }

@@ -20,18 +20,31 @@ the rest generalize it:
                     regime where cost-aware slice sizing (DESIGN.md
                     §14) buys the same hit-rate for fewer cloud $
 
+Queued (multi-tenant) scenarios drive the fleet layer (DESIGN.md §16):
+jobs arrive as a *stream* into the CentralQueue instead of being placed
+on arrival, a Scheduler picks placements, and a fleet autoscaler sizes
+the shared cloud pool under a global budget:
+
+  multi_tenant_rush three tenants of unequal weight flood the queue
+                    far past site capacity — the tournament's overload
+                    world (fairness + starvation live here)
+  diurnal_stream    a day of sinusoidally-modulated Poisson arrivals —
+                    the queue-pressure signal the pool policies track
+
 All sizes are in simulated seconds/chips; a full policy×scenario sweep
 runs in well under a minute of wall time on CPU.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
 from repro.core import OverheadModel
 from repro.core.events import BackgroundLoad
 from repro.sim.fleet import CloudProvider, JobSpec
+from repro.sim.queue import Tenant
 
 __all__ = [
     "SEAM_PROBE",
@@ -39,10 +52,15 @@ __all__ = [
     "calm",
     "deadline_squeeze",
     "default_scenarios",
+    "diurnal_jobs",
+    "diurnal_stream",
+    "multi_tenant_rush",
     "node_failures",
     "overheads_from_probe",
     "overload_ramp",
     "poisson_background",
+    "poisson_jobs",
+    "queued_scenarios",
     "spot_market",
     "superlinear_cache",
     "transient_spike",
@@ -123,6 +141,21 @@ class Scenario:
     #: BurstPlanner cost/deadline trade-off knob (DESIGN.md §14);
     #: 0 keeps the deadline-first minimal-slice solve
     planner_cost_weight: float = 0.0
+    # ---- fleet-of-jobs layer (DESIGN.md §16); defaults reduce the
+    # ---- controller exactly to the PR-2 place-on-arrival FleetSim
+    #: "immediate" (no queue) or a SCHEDULER_FACTORIES name
+    scheduler: str = "immediate"
+    #: "none" (no shared pool) or a FLEET_POLICY_FACTORIES name
+    fleet_policy: str = "none"
+    #: hard cap on concurrent cloud chips held OR staged fleet-wide
+    cloud_chip_cap: int | None = None
+    #: $ gate: no NEW provisioning once accrued spend crosses this
+    cloud_budget_usd: float = float("inf")
+    #: declared fair-share tenants; job tenants missing here get weight 1
+    tenants: tuple[Tenant, ...] = ()
+    #: starvation guard: a weighted tenant waiting longer than this
+    #: blocks all admissions that would overtake it
+    starve_patience_s: float = 900.0
 
 
 def _jobs(n: int, *, steps: int, deadline_s: float,
@@ -288,3 +321,149 @@ def default_scenarios(seed: int = 0) -> tuple[Scenario, ...]:
         node_failures(seed),
         superlinear_cache(seed),
     )
+
+
+# ---- job streams for the fleet layer (DESIGN.md §16) ----------------------
+
+def _stream_job(
+    rng: np.random.Generator, i: int, t: float,
+    tenants: tuple[str, ...],
+    steps_rng: tuple[int, int], chips_choices: tuple[int, ...],
+    work_per_chip_s: float, slack: tuple[float, float],
+    name_prefix: str,
+) -> JobSpec:
+    """One job of a stream: small (site fits several at once), with a
+    deadline drawn as a slack multiple of its own on-premise runtime —
+    so queue wait is exactly what eats the slack under overload."""
+    steps = int(rng.integers(steps_rng[0], steps_rng[1] + 1))
+    chips = int(rng.choice(np.asarray(chips_choices)))
+    work = work_per_chip_s * chips       # work_per_chip_s s/step on-prem
+    run_s = steps * work_per_chip_s
+    return JobSpec(
+        name=f"{name_prefix}{i}",
+        arrival_s=t,
+        steps_total=steps,
+        deadline_s=run_s * float(rng.uniform(*slack)),
+        chip_seconds_per_step=work,
+        onprem_chips=chips,
+        tenant=tenants[i % len(tenants)],
+    )
+
+
+def poisson_jobs(
+    rng: np.random.Generator,
+    *,
+    n: int,
+    rate_per_hour: float,
+    tenants: tuple[str, ...] = ("user0",),
+    steps_rng: tuple[int, int] = (20, 60),
+    chips_choices: tuple[int, ...] = (16, 32, 64),
+    work_per_chip_s: float = 8.0,
+    slack: tuple[float, float] = (4.0, 10.0),
+    name_prefix: str = "job",
+) -> tuple[JobSpec, ...]:
+    """A Poisson stream of ``n`` foreground jobs, tenants assigned
+    round-robin (so tenant mix is exact, not sampled)."""
+    out = []
+    t = 0.0
+    for i in range(n):
+        t += float(rng.exponential(3600.0 / rate_per_hour))
+        out.append(_stream_job(
+            rng, i, t, tenants, steps_rng, chips_choices,
+            work_per_chip_s, slack, name_prefix,
+        ))
+    return tuple(out)
+
+
+def diurnal_jobs(
+    rng: np.random.Generator,
+    *,
+    n: int,
+    base_rate_per_hour: float,
+    peak_rate_per_hour: float,
+    period_s: float = 86400.0,
+    tenants: tuple[str, ...] = ("user0",),
+    steps_rng: tuple[int, int] = (20, 60),
+    chips_choices: tuple[int, ...] = (16, 32, 64),
+    work_per_chip_s: float = 8.0,
+    slack: tuple[float, float] = (4.0, 10.0),
+    name_prefix: str = "job",
+) -> tuple[JobSpec, ...]:
+    """Sinusoidally-modulated Poisson arrivals (thinning construction):
+    the rate climbs from ``base`` at t=0 to ``peak`` half a period in —
+    the day/night pressure signal the pool forecasters track."""
+    out = []
+    t = 0.0
+    i = 0
+    while i < n:
+        t += float(rng.exponential(3600.0 / peak_rate_per_hour))
+        phase = 0.5 - 0.5 * math.cos(2.0 * math.pi * t / period_s)
+        rate = (base_rate_per_hour
+                + (peak_rate_per_hour - base_rate_per_hour) * phase)
+        if float(rng.uniform()) * peak_rate_per_hour > rate:
+            continue                     # thinned out
+        out.append(_stream_job(
+            rng, i, t, tenants, steps_rng, chips_choices,
+            work_per_chip_s, slack, name_prefix,
+        ))
+        i += 1
+    return tuple(out)
+
+
+def multi_tenant_rush(seed: int = 0, n_jobs: int = 60,
+                      rate_per_hour: float = 240.0,
+                      budget_usd: float = 400.0) -> Scenario:
+    """Three tenants of unequal weight flood the queue far past site
+    capacity: sustained offered load ≈ 3× the 256-chip site, so hit
+    rates separate on (scheduler, fleet-policy) quality and the
+    fairness column is live.  ``n_jobs=1000+`` is the tournament's
+    thousand-concurrent-jobs configuration — same world, longer rush."""
+    rng = np.random.default_rng([seed, 300])
+    return Scenario(
+        name="multi_tenant_rush",
+        jobs=poisson_jobs(
+            rng, n=n_jobs, rate_per_hour=rate_per_hour,
+            tenants=("gold", "silver", "silver", "scav"),
+        ),
+        scheduler="fill",
+        fleet_policy="adapt",
+        cloud_chip_cap=512,
+        cloud_budget_usd=budget_usd,
+        tenants=(
+            Tenant("gold", weight=3.0, priority=1.0),
+            Tenant("silver", weight=1.0),
+            Tenant("scav", weight=0.0),     # scavenger: runs on leftovers
+        ),
+        starve_patience_s=600.0,
+        description="weighted tenants rush the queue at ~3x site "
+                    "capacity; placement + pool policy decide who hits",
+    )
+
+
+def diurnal_stream(seed: int = 0, n_jobs: int = 48,
+                   budget_usd: float = 300.0) -> Scenario:
+    """A compressed day of diurnal arrivals from two equal tenants: the
+    pool forecasters (reg/conpaas) get a predictable pressure wave to
+    track; over-provisioning shows up directly in pool_cost."""
+    rng = np.random.default_rng([seed, 400])
+    return Scenario(
+        name="diurnal_stream",
+        jobs=diurnal_jobs(
+            rng, n=n_jobs, base_rate_per_hour=30.0,
+            peak_rate_per_hour=360.0, period_s=7200.0,
+            tenants=("ops", "research"),
+        ),
+        scheduler="best-fit",
+        fleet_policy="reg",
+        cloud_chip_cap=512,
+        cloud_budget_usd=budget_usd,
+        tenants=(Tenant("ops"), Tenant("research")),
+        description="sinusoidal arrival wave (2 h period): forecasting "
+                    "pool policies should pre-provision into the crest "
+                    "and drain into the trough",
+    )
+
+
+def queued_scenarios(seed: int = 0) -> tuple[Scenario, ...]:
+    """The fleet-layer worlds the tournament runs (DESIGN.md §16)."""
+    return (multi_tenant_rush(seed), diurnal_stream(seed))

@@ -8,6 +8,7 @@ that orchestrator grow/shrink transitions preserve checkpoint/restore
 invariants.
 """
 import dataclasses
+import os
 
 import numpy as np
 import pytest
@@ -31,8 +32,11 @@ from repro.core.sim_session import SimSession, SimWorkload, \
 from repro.sim import (
     POLICY_FACTORIES,
     FleetSim,
+    JobSpec,
     NoBurstAutoscaler,
     PlanAutoscaler,
+    Scenario,
+    Tenant,
 )
 from repro.sim.scenarios import (
     calm,
@@ -423,3 +427,188 @@ def test_orchestrator_scale_overheads_accounted():
     # the scaled run can only be slower by overheads it actually paid
     # (the grown pod also speeds steps up, so bound from above only)
     assert scaled.elapsed_s <= plain.elapsed_s + overhead_paid + 1e-6
+
+
+# ------------------------------------------- fleet-of-jobs layer (§16)
+
+
+def test_queued_fleet_bit_deterministic():
+    """The PR-2 determinism pin extended to the multi-job queue layer:
+    identical (scenario, scheduler, policy, seed) -> bitwise-identical
+    FleetRecords, including wait/fairness/pool fields and both event
+    logs."""
+    from repro.sim.scenarios import multi_tenant_rush
+
+    sc = multi_tenant_rush(0, n_jobs=14)
+    for sched, fp in (("fill", "adapt"), ("fifo", "token")):
+        a = FleetSim(sc, POLICY_FACTORIES["react"], seed=7,
+                     scheduler=sched, fleet_policy=fp).run()
+        b = FleetSim(sc, POLICY_FACTORIES["react"], seed=7,
+                     scheduler=sched, fleet_policy=fp).run()
+        assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    c = FleetSim(sc, POLICY_FACTORIES["react"], seed=8,
+                 scheduler="fill", fleet_policy="adapt").run()
+    assert dataclasses.asdict(c) != dataclasses.asdict(a)
+
+
+def test_queued_fleet_deterministic_across_subprocess():
+    """Bit-determinism must hold across process boundaries (no dict /
+    hash / id ordering may leak into the record): the same queued run
+    digests identically in a fresh interpreter."""
+    import hashlib
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    from repro.sim.scenarios import multi_tenant_rush
+
+    script = (
+        "import dataclasses, hashlib\n"
+        "from repro.sim import FleetSim, POLICY_FACTORIES\n"
+        "from repro.sim.scenarios import multi_tenant_rush\n"
+        "rec = FleetSim(multi_tenant_rush(0, n_jobs=10),\n"
+        "               POLICY_FACTORIES['react'], seed=3,\n"
+        "               scheduler='best-fit', fleet_policy='reg').run()\n"
+        "print(hashlib.sha256(\n"
+        "    repr(dataclasses.asdict(rec)).encode()).hexdigest())\n"
+    )
+    rec = FleetSim(multi_tenant_rush(0, n_jobs=10),
+                   POLICY_FACTORIES["react"], seed=3,
+                   scheduler="best-fit", fleet_policy="reg").run()
+    here = hashlib.sha256(
+        repr(dataclasses.asdict(rec)).encode()
+    ).hexdigest()
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env={"PYTHONPATH": src, "PATH": "/usr/bin:/bin"}, check=True,
+    )
+    assert out.stdout.strip() == here
+
+
+def test_mid_run_snapshot_bills_rented_pool_pod():
+    """The §16 generalization of the accrual fix: a mid-run FleetRecord
+    must bill EVERY concurrently-held pod up to `now` — including a
+    cloud-hosted (rented) home pod that _bill_cloud never flushed."""
+    from repro.sim.queue import Tenant
+    from repro.sim.scenarios import Scenario
+
+    job = JobSpec(name="wide", arrival_s=0.0, steps_total=100,
+                  deadline_s=10_000.0, chip_seconds_per_step=256.0,
+                  onprem_chips=32)
+    sc = Scenario(name="tiny_site", jobs=(job,), site_chips=16,
+                  scheduler="fill", fleet_policy="adapt",
+                  tenants=(Tenant("user0"),))
+    sim = FleetSim(sc, POLICY_FACTORIES["no-burst"], seed=0)
+    rec = sim.run(until_s=400.0)
+    j = rec.jobs[0]
+    assert j.state == "running"
+    admit = next(d for _, k, d in j.events if k == "admit")
+    assert admit["placement"] == "cloud"
+    admit_t = next(t for t, k, _ in j.events if k == "admit")
+    assert j.cloud_chip_s == pytest.approx(32 * (400.0 - admit_t))
+    assert j.cloud_cost == pytest.approx(
+        sim.cloud.cost(32 * (400.0 - admit_t))
+    )
+
+
+def test_staged_pods_count_in_fleet_committed():
+    """The PR-4 double-request fix generalized fleet-wide: the global
+    cap must see chips *staged* for any job (pending grow action or
+    in-flight provision) plus rented home pods and the pool."""
+    from repro.sim.scenarios import multi_tenant_rush
+
+    sim = FleetSim(multi_tenant_rush(0, n_jobs=4),
+                   POLICY_FACTORIES["react"], seed=0)
+    sim.now = 0.0
+    sim._arrive(sim.jobs[0])
+    sim._admit_pass()
+    jrt = sim.jobs[0]
+    assert jrt.arrived
+    base = sim._fleet_committed()
+    jrt.pending_action = ScaleAction("grow", chips=64, slowdown=1.4)
+    assert sim._fleet_committed() == base + 64
+    jrt.pending_action = None
+    jrt.pending_target = 128
+    assert sim._fleet_committed() == base + 128
+    jrt.pending_target = 0
+    sim.pool_free += 32
+    sim.pool_pending += 16
+    assert sim._fleet_committed() == base + 48
+
+
+def test_starvation_guard_blocks_and_releases():
+    """While a weighted tenant has waited past patience and cannot fit,
+    NOBODY may be admitted past it; once it fits it goes first."""
+    from repro.sim.queue import Tenant
+    from repro.sim.scenarios import Scenario
+
+    def _j(name, chips, arrival, tenant):
+        return JobSpec(name=name, arrival_s=arrival, steps_total=50,
+                       deadline_s=50_000.0,
+                       chip_seconds_per_step=8.0 * chips,
+                       onprem_chips=chips, tenant=tenant)
+
+    sc = Scenario(
+        name="starve", site_chips=64, scheduler="fill",
+        starve_patience_s=600.0,
+        tenants=(Tenant("a", weight=2.0), Tenant("b", weight=1.0)),
+        jobs=(_j("big", 48, 0.0, "a"), _j("mid", 32, 10.0, "b"),
+              _j("small", 16, 650.0, "a")),
+    )
+    sim = FleetSim(sc, POLICY_FACTORIES["no-burst"], seed=0)
+    sim.now = 0.0
+    sim._arrive(sim.jobs[0])          # occupies 48 of 64
+    sim.now = 10.0
+    sim._arrive(sim.jobs[1])          # 32 > 16 free: waits
+    sim.now = 650.0
+    sim._arrive(sim.jobs[2])          # fits, but 'mid' expired: blocked
+    assert sim.jobs[2].state == "queued"
+    assert any(k == "admission_blocked" for _, k, _ in sim.fleet_events)
+    sim._finish(sim.jobs[0])          # frees the site at t=650
+    assert sim.jobs[1].state == "running"     # expired head goes first
+    sim._admit_pass()
+    assert sim.jobs[2].state == "running"     # then normal admission
+    admit = next(d for _, k, d in sim.jobs[1].events if k == "admit")
+    assert admit["expired_present"] and admit["entry_expired"]
+
+
+def test_rented_pool_chips_return_on_finish():
+    """Cloud-side admission is a loan from the pool: the home pod's
+    chips must flow back to pool_free when the job finishes."""
+    from repro.sim.queue import Tenant
+    from repro.sim.scenarios import Scenario
+
+    job = JobSpec(name="wide", arrival_s=0.0, steps_total=10,
+                  deadline_s=10_000.0, chip_seconds_per_step=256.0,
+                  onprem_chips=32)
+    sc = Scenario(name="tiny_site", jobs=(job,), site_chips=16,
+                  scheduler="fill", fleet_policy="adapt",
+                  tenants=(Tenant("user0"),))
+    rec = FleetSim(sc, POLICY_FACTORIES["no-burst"], seed=0).run()
+    j = rec.jobs[0]
+    assert j.finished
+    returns = [
+        d for t, k, d in rec.fleet_events
+        if k == "pool_return" and d["job"] == "wide"
+    ]
+    assert any(d["chips"] == 32 for d in returns)
+    # and the job paid for its rented chips
+    assert j.cloud_chip_s > 0
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(
+    not os.environ.get("RUN_SLOW"),
+    reason="thousand-job tournament cell (~5 s); set RUN_SLOW=1",
+)
+def test_thousand_job_rush_conserves_and_scores():
+    from repro.sim.scenarios import multi_tenant_rush
+
+    sc = multi_tenant_rush(0, n_jobs=1000, rate_per_hour=1200.0,
+                           budget_usd=6000.0)
+    rec = FleetSim(sc, POLICY_FACTORIES["react"], seed=0,
+                   scheduler="fill", fleet_policy="adapt").run()
+    assert len(rec.jobs) == 1000
+    assert all(j.state == "finished" for j in rec.jobs)
+    assert 0.0 <= rec.hit_rate <= 1.0 and 0.0 <= rec.fairness <= 1.0

@@ -1,0 +1,447 @@
+"""Property-based suite for the fleet-of-jobs layer (DESIGN.md §16).
+
+Randomized small worlds through the full FleetController — queue,
+schedulers, pool policies, caps — checking the invariants the
+tournament's numbers silently rely on:
+
+  * the site is never over-allocated at any event time
+  * billed cloud chip-seconds reconstruct EXACTLY from the event log
+    (job admit/scale/rollback/finish events + fleet pool events)
+  * the global $ gate: no provisioning request is issued after spend
+    crosses the budget; the chip cap bounds held cloud chips always
+  * fair-share never starves a nonzero-weight tenant (the starvation
+    guard: nobody is admitted past a patience-expired weighted entry)
+  * queue conservation: every job ends finished / running / queued —
+    none dropped, none duplicated
+
+The worlds come from a seeded generator, so the suite is deterministic
+and runs everywhere; when ``hypothesis`` is installed (the
+test_core_properties.py arrangement) it additionally fuzzes the same
+generator through the same invariant checks, with shrinking on the
+world seed.  Pure-primitive properties (max_min_fair_allocation
+water-filling, min_weighted_share bounds, floor_to_legal_slice,
+CentralQueue ordering, scheduler placement) are checked directly.
+"""
+import math
+import random
+
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:          # pragma: no cover - env dependent
+    st = None
+
+from repro.core import (
+    floor_to_legal_slice,
+    max_min_fair_allocation,
+    min_weighted_share,
+)
+from repro.sim import (
+    POLICY_FACTORIES,
+    CentralQueue,
+    FleetSim,
+    JobSpec,
+    QueueEntry,
+    Tenant,
+)
+from repro.sim.scenarios import Scenario
+from repro.sim.schedulers import (
+    SCHEDULER_FACTORIES,
+    BestFitScheduler,
+    FifoScheduler,
+    FillScheduler,
+    WorstFitScheduler,
+)
+
+LEGAL = (16, 32, 64, 128, 256)
+PRICE = 3.0
+TENANTS = (
+    Tenant("a", weight=2.0, priority=1.0),
+    Tenant("b", weight=1.0),
+    Tenant("z", weight=0.0),            # scavenger
+)
+
+
+def make_world(rng: random.Random):
+    """One small random queued world plus the knobs of one run."""
+    n = rng.randint(3, 8)
+    t = 0.0
+    jobs = []
+    for i in range(n):
+        t += rng.uniform(0.0, 150.0)
+        chips = rng.choice([16, 32, 64])
+        jobs.append(JobSpec(
+            name=f"j{i}", arrival_s=t,
+            steps_total=rng.randint(4, 12),
+            deadline_s=rng.uniform(300.0, 2500.0),
+            chip_seconds_per_step=8.0 * chips,
+            onprem_chips=chips,
+            tenant=rng.choice(["a", "b", "z"]),
+        ))
+    sc = Scenario(
+        name="prop", jobs=tuple(jobs), site_chips=128,
+        scheduler=rng.choice(sorted(SCHEDULER_FACTORIES)),
+        fleet_policy=rng.choice(
+            ["none", "adapt", "reg", "conpaas", "token"]
+        ),
+        cloud_chip_cap=rng.choice([None, 64, 192]),
+        cloud_budget_usd=rng.choice([math.inf, 30.0, 150.0]),
+        tenants=TENANTS,
+        starve_patience_s=rng.choice([240.0, 900.0]),
+    )
+    policy = rng.choice(["no-burst", "react", "always-burst"])
+    return sc, policy, rng.randint(0, 3)
+
+
+N_WORLDS = 18
+_RECORDS: dict[int, object] = {}
+
+
+def world(i: int):
+    return make_world(random.Random(i))
+
+
+def record(i: int):
+    if i not in _RECORDS:
+        sc, policy, seed = world(i)
+        _RECORDS[i] = FleetSim(
+            sc, POLICY_FACTORIES[policy], seed=seed
+        ).run()
+    return _RECORDS[i]
+
+
+# ---- event-log reconstruction helpers -------------------------------------
+
+def _holdings(job):
+    """(time, cloud_chips_held) step function for one job from its own
+    event log: rented home pod from the admit placement, elastic pod
+    from scale/rollback events."""
+    steps = []
+    rented = 0
+    for t, kind, d in job.events:
+        if kind == "admit":
+            rented = d["chips"] if d["placement"] == "cloud" else 0
+            steps.append((t, rented))
+        elif kind == "arrival" and not steps:
+            steps.append((t, 0))       # immediate-mode placement
+        elif kind in ("scale", "spot_reclaim", "node_failure"):
+            steps.append((t, rented + d["cloud_chips"]))
+        elif kind == "finish":
+            steps.append((t, 0))
+    return steps
+
+
+def _integrate(steps, end_s):
+    total = 0.0
+    for (t0, c), (t1, _) in zip(steps, steps[1:]):
+        total += c * (t1 - t0)
+    if steps:
+        t_last, c_last = steps[-1]
+        total += c_last * max(end_s - t_last, 0.0)
+    return total
+
+
+def _pool_steps(fleet_events):
+    """(time, pool_free) step function from the fleet event log."""
+    delta = {
+        "pool_online": +1, "pool_return": +1,
+        "pool_draw": -1, "pool_host": -1,
+        "pool_shrink": -1, "pool_drain": -1,
+    }
+    level = 0
+    steps = [(0.0, 0)]
+    for t, kind, d in fleet_events:
+        if kind in delta:
+            level += delta[kind] * d["chips"]
+            steps.append((t, level))
+    return steps
+
+
+# ---- the invariant checks (shared by seeded + hypothesis drivers) ---------
+
+def check_site_never_over_allocated(sc, r):
+    # at equal timestamps releases come first: _finish frees the site
+    # and then runs the admission pass at the same virtual time
+    changes = []
+    for job in r.jobs:
+        site_chips = 0
+        for t, kind, d in job.events:
+            if kind == "admit" and d["placement"] == "site":
+                site_chips = d["chips"]
+                changes.append((t, 1, site_chips))
+                assert d["site_used_after"] <= sc.site_chips
+            elif kind == "finish" and site_chips:
+                changes.append((t, 0, -site_chips))
+    used = 0
+    for _, _, dc in sorted(changes, key=lambda x: (x[0], x[1])):
+        used += dc
+        assert 0 <= used <= sc.site_chips
+
+
+def check_billing_reconstructs(sc, r):
+    for job in r.jobs:
+        if not job.finished:
+            continue
+        want = _integrate(_holdings(job), job.finish_s)
+        assert job.cloud_chip_s == pytest.approx(want, abs=1e-6), job.name
+    steps = _pool_steps(r.fleet_events)
+    assert all(level >= 0 for _, level in steps)
+    if r.queued_at_end == 0 and steps[-1][1] == 0:
+        pool_s = _integrate(steps, steps[-1][0])
+        assert r.pool_cost == pytest.approx(
+            pool_s / 3600.0 * PRICE, abs=1e-6
+        )
+
+
+def check_budget_gate_and_chip_cap(sc, r):
+    if sc.cloud_chip_cap is not None:
+        assert all(c <= sc.cloud_chip_cap for _, c in r.cloud_timeline)
+    if sc.cloud_budget_usd == math.inf:
+        return
+    job_steps = [_holdings(j) for j in r.jobs]
+    ends = [j.finish_s if j.finished else math.inf for j in r.jobs]
+    pool = _pool_steps(r.fleet_events)
+
+    def spent(t):
+        chip_s = sum(
+            _integrate([(t0, c) for t0, c in s if t0 <= t], min(t, e))
+            for s, e in zip(job_steps, ends)
+        )
+        chip_s += _integrate([(t0, c) for t0, c in pool if t0 <= t], t)
+        return chip_s / 3600.0 * PRICE
+
+    reqs = [
+        t for j in r.jobs for t, k, _ in j.events
+        if k == "provision_request"
+    ] + [
+        t for t, k, _ in r.fleet_events
+        if k == "pool_provision_request"
+    ]
+    for t in reqs:
+        assert spent(t) < sc.cloud_budget_usd + 1e-9
+
+
+def check_no_weighted_tenant_starved(sc, r):
+    for job in r.jobs:
+        for _, kind, d in job.events:
+            if kind == "admit" and d["expired_present"]:
+                # the starvation guard: while a weighted tenant waits
+                # past patience, only expired entries are admitted
+                assert d["entry_expired"], job.name
+
+
+def check_queue_conservation(sc, r):
+    assert len(r.jobs) == len(sc.jobs)
+    assert {j.name for j in r.jobs} == {j.name for j in sc.jobs}
+    for job in r.jobs:
+        assert job.state in ("finished", "running", "queued", "pending")
+        kinds = [k for _, k, _ in job.events]
+        if job.finished:
+            assert "arrival" in kinds
+            assert kinds.count("finish") == 1
+        if job.state == "queued":
+            assert "arrival" not in kinds
+    if r.queued_at_end == 0:
+        assert all(
+            any(k == "arrival" for _, k, _ in j.events) for j in r.jobs
+        )
+
+
+def check_scores_well_formed(sc, r):
+    assert 0.0 <= r.fairness <= 1.0
+    assert r.mean_wait_s <= r.max_wait_s + 1e-9
+    assert all(j.wait_s >= 0 for j in r.jobs)
+    assert 0.0 <= r.hit_rate <= 1.0
+
+
+CHECKS = [
+    check_site_never_over_allocated,
+    check_billing_reconstructs,
+    check_budget_gate_and_chip_cap,
+    check_no_weighted_tenant_starved,
+    check_queue_conservation,
+    check_scores_well_formed,
+]
+
+
+# ---- seeded drivers (always run) ------------------------------------------
+
+@pytest.mark.parametrize("i", range(N_WORLDS))
+def test_site_never_over_allocated(i):
+    check_site_never_over_allocated(world(i)[0], record(i))
+
+
+@pytest.mark.parametrize("i", range(N_WORLDS))
+def test_billing_reconstructs_from_event_log(i):
+    check_billing_reconstructs(world(i)[0], record(i))
+
+
+@pytest.mark.parametrize("i", range(N_WORLDS))
+def test_budget_gate_and_chip_cap(i):
+    check_budget_gate_and_chip_cap(world(i)[0], record(i))
+
+
+@pytest.mark.parametrize("i", range(N_WORLDS))
+def test_no_weighted_tenant_starved(i):
+    check_no_weighted_tenant_starved(world(i)[0], record(i))
+
+
+@pytest.mark.parametrize("i", range(N_WORLDS))
+def test_queue_conservation(i):
+    check_queue_conservation(world(i)[0], record(i))
+
+
+@pytest.mark.parametrize("i", range(N_WORLDS))
+def test_fairness_and_waits_well_formed(i):
+    check_scores_well_formed(world(i)[0], record(i))
+
+
+# ---- hypothesis driver (when installed) -----------------------------------
+
+if st is not None:
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(0, 10 ** 6))
+    def test_hypothesis_fuzz_fleet_invariants(world_seed):
+        sc, policy, seed = make_world(random.Random(world_seed))
+        r = FleetSim(sc, POLICY_FACTORIES[policy], seed=seed).run()
+        for check in CHECKS:
+            check(sc, r)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_hypothesis_fuzz_fleet_invariants():
+        pass
+
+
+# ---- primitive properties -------------------------------------------------
+
+def _float_cases(n, lo, hi, seed):
+    rng = random.Random(seed)
+    return [rng.uniform(lo, hi) for _ in range(n)]
+
+
+def test_max_min_fair_allocation_is_water_filling():
+    rng = random.Random(7)
+    for _ in range(200):
+        n = rng.randint(1, 8)
+        cap = rng.uniform(0.0, 1e4)
+        demands = [rng.uniform(0.0, 1e3) for _ in range(n)]
+        weights = [rng.choice([0.0, 0.5, 1.0, 3.0]) for _ in range(n)]
+        alloc = max_min_fair_allocation(cap, demands, weights)
+        assert len(alloc) == n
+        for a, d in zip(alloc, demands):
+            assert -1e-9 <= a <= d + 1e-9
+        assert sum(alloc) <= min(cap, sum(demands)) + 1e-6
+        if sum(d for d, w in zip(demands, weights) if w > 0) <= cap:
+            for a, d, w in zip(alloc, demands, weights):
+                if w > 0:
+                    assert a == pytest.approx(d, abs=1e-6)
+        # water level: unsatisfied positive-weight parties sit at the
+        # common per-weight level; satisfied ones at or below it
+        unsat = [
+            a / w for a, d, w in zip(alloc, demands, weights)
+            if w > 0 and a < d - 1e-6
+        ]
+        if unsat:
+            level = min(unsat)
+            assert max(unsat) == pytest.approx(level, rel=1e-6,
+                                               abs=1e-6)
+            for a, d, w in zip(alloc, demands, weights):
+                if w > 0:
+                    assert a / w <= level + 1e-6
+
+
+def test_max_min_zero_weight_served_from_residual_only():
+    # capacity 100: the weighted demand takes 80, the scavenger gets
+    # only the 20 left over
+    alloc = max_min_fair_allocation(100.0, [80.0, 50.0], [1.0, 0.0])
+    assert alloc == pytest.approx([80.0, 20.0])
+    # no residual -> scavenger gets nothing
+    alloc = max_min_fair_allocation(60.0, [80.0, 50.0], [1.0, 0.0])
+    assert alloc == pytest.approx([60.0, 0.0])
+
+
+def test_min_weighted_share_bounds():
+    rng = random.Random(11)
+    for _ in range(200):
+        n = rng.randint(2, 6)
+        usage = [rng.uniform(0.0, 1e3) for _ in range(n)]
+        weights = [rng.uniform(0.1, 5.0) for _ in range(n)]
+        s = min_weighted_share(usage, weights)
+        assert 0.0 <= s <= 1.0
+        # exactly proportional usage is perfectly fair
+        total = sum(weights)
+        prop = [w / total * 100.0 for w in weights]
+        assert min_weighted_share(prop, weights) == pytest.approx(1.0)
+
+
+def test_min_weighted_share_demand_bounded():
+    # party 0 asked for little and got all of it: not a fairness victim
+    assert min_weighted_share(
+        [10.0, 1000.0], [1.0, 1.0], demands=[10.0, 5000.0]
+    ) == pytest.approx(1.0)
+    # same usage without the demand bound: heavily unfair
+    assert min_weighted_share([10.0, 1000.0], [1.0, 1.0]) < 0.05
+    # a starved positive-weight party with real demand scores 0
+    assert min_weighted_share(
+        [0.0, 100.0], [1.0, 1.0], demands=[50.0, 100.0]
+    ) == 0.0
+
+
+def test_floor_to_legal_slice_props():
+    for c in range(0, 600, 7):
+        f = floor_to_legal_slice(c, LEGAL)
+        assert f in (0,) + LEGAL
+        assert f <= c
+        bigger = [s for s in LEGAL if s <= c]
+        assert f == (max(bigger) if bigger else 0)
+
+
+def _entry(name, tenant, chips, t=0.0, prio=0.0):
+    return QueueEntry(name=name, tenant=tenant, chips=chips,
+                      work_chip_s=100.0, enqueued_s=t, priority=prio)
+
+
+def test_central_queue_fair_share_ordering():
+    q = CentralQueue({t.name: t for t in TENANTS})
+    q.push(_entry("heavy", "b", 16, t=0.0))
+    q.push(_entry("light", "a", 16, t=1.0))
+    q.push(_entry("scav", "z", 16, t=-5.0))
+    # tenant a has consumed less per unit weight -> goes first; the
+    # scavenger goes last despite the earliest arrival
+    order = [e.name for e in q.order({"a": 100.0, "b": 400.0})]
+    assert order == ["light", "heavy", "scav"]
+    # priority breaks deficit ties
+    q2 = CentralQueue({t.name: t for t in TENANTS})
+    q2.push(_entry("lo", "b", 16, t=0.0))
+    q2.push(_entry("hi", "b", 16, t=1.0, prio=2.0))
+    assert [e.name for e in q2.order()] == ["hi", "lo"]
+    with pytest.raises(ValueError):
+        q.push(_entry("light", "a", 16))
+
+
+def test_fifo_blocks_fill_backfills():
+    big = _entry("big", "a", 100, t=0.0)
+    small = _entry("small", "b", 16, t=1.0)
+    free = {"site": 32}
+    assert FifoScheduler().select([big, small], free) == []
+    assert FillScheduler().select([big, small], free) == [
+        (small, "site")
+    ]
+
+
+def test_best_fit_packs_worst_fit_spreads():
+    a = _entry("a", "a", 16)
+    b = _entry("b", "b", 64)
+    free = {"site": 80, "cloud": 24}
+    best = BestFitScheduler().select([a, b], dict(free))
+    # best-fit puts the 16 on the 24-chip pool (leftover 8), the 64 on
+    # the site (leftover 16)
+    assert sorted((e.name, tgt) for e, tgt in best) == [
+        ("a", "cloud"), ("b", "site")
+    ]
+    worst = WorstFitScheduler().select([a, b], dict(free))
+    # worst-fit keeps headroom: the 16 goes on the big site first
+    assert worst[0] == (a, "site")
