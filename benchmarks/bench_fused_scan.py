@@ -41,6 +41,7 @@ if "jax" not in sys.modules:
             _flags + " --xla_force_host_platform_device_count=2"
         ).strip()
 
+import functools  # noqa: E402
 import time  # noqa: E402
 
 import jax  # noqa: E402
@@ -190,8 +191,10 @@ def build_engines(cfg: FWIConfig, steps: int, *, stripes: int | None = None):
 
     # shot-parallel fused blocks: the paper's first-level task-parallel
     # split (shots are independent) — zero communication, so parallel
-    # efficiency is bounded only by the host
-    if n > 1 and cfg.n_shots % n == 0:
+    # efficiency is bounded only by the host.  Uneven splits are legal
+    # now (the runner pads the batch to the device count), so the old
+    # ``n_shots % n == 0`` gate is gone.
+    if n > 1:
         run_sp, place_sp = make_shot_parallel_runner(cfg, n, k=k)
         psp, ppsp = place_sp((st.p, st.p_prev))
 
@@ -369,6 +372,265 @@ def big_trajectory_point(grids=BIG_GRIDS, steps: int = 8,
     return point
 
 
+def _vmapped_block_runner(cfg: FWIConfig, k: int):
+    """The PRE-shot-batch engine body, reconstructed for the bench:
+    ``jax.vmap`` of the per-shot ``wave_block_ref`` inside the block
+    scan — exactly what ``_block_scan_body`` did before DESIGN.md §17
+    replaced it with one batched ``wave_block`` call.  This is the
+    baseline the shot-batched engine is measured against."""
+    from repro.kernels.stencil.ref import wave_block_ref
+
+    v = velocity_model(cfg)
+    v2dt2 = (v * cfg.dt / cfg.dx) ** 2
+    sponge = sponge_taper(cfg)
+    wavelet = ricker(cfg)
+    pos = cfg.shot_positions()
+    src_z = jnp.asarray(pos[:, 0])
+    src_x = jnp.asarray(pos[:, 1])
+
+    @functools.partial(jax.jit, static_argnames=("steps",))
+    def run(p, p_prev, t0, steps):
+        blocks = steps // k
+
+        def body(carry, b):
+            pc, pp = carry
+            tt = t0 + b * k + jnp.arange(k)
+            srcv = wavelet[jnp.clip(tt, 0, cfg.timesteps - 1)] \
+                * (cfg.dt ** 2)
+
+            def one(a, bb, zi, xi):
+                return wave_block_ref(
+                    a, bb, v2dt2, sponge, srcv, zi, xi,
+                    receiver_row=cfg.receiver_depth,
+                )
+
+            pn, pd, tr = jax.vmap(one, (0, 0, 0, 0))(pc, pp, src_z, src_x)
+            return (pn, pd), tr
+
+        (p, p_prev), trs = jax.lax.scan(body, (p, p_prev),
+                                        jnp.arange(blocks))
+        return p, p_prev, trs
+
+    return run
+
+
+SHOT_BATCH_BIG_GRID = (1536, 1536, 2, 4)   # nz, nx, shots, k: must stream
+
+
+def shot_batch_point(steps: int = 48, rounds: int = 6,
+                     pallas_rounds: int = 3) -> dict:
+    """Trajectory point (tier "shot_batch") for the batched engine.
+
+    Rows come in matched batched-vs-vmapped pairs (DESIGN.md §17):
+
+    * XLA scan runners at the paper geometry — the old vmapped block
+      body vs ``make_block_runner``'s batched dispatch.  On CPU XLA
+      compiles the vmapped body into the same fused loop as the
+      hand-batched mirror (they are bitwise-identical), so this pair is
+      expected to be a wash; it is recorded to pin that fact.
+    * Pallas-interpret per-block rows — ``vmap``-of-
+      ``wave_block_pallas`` (one kernel per shot) vs the batched kernel
+      at the dispatch's default shot tile and the streamed full-batch
+      kernel.  Here the launch/grid-pass amortization is real work
+      removed (S·nz/bz passes → (S/tile)·nz/bz), so this pair carries
+      the batched-beats-vmapped acceptance ratio.
+    * A big-tier pair at a grid whose batch CANNOT sit resident in
+      VMEM, where the streamed batched kernel is the only in-budget
+      path (XLA strip mirrors for wall clock, per the big-tier
+      convention, plus the interpret pair for the record).
+    """
+    from repro.kernels.stencil.kernel import (
+        DEFAULT_VMEM_BUDGET,
+        pick_bz_block,
+        pick_bz_stream,
+        pick_shot_tile,
+        resident_vmem_bytes,
+        stream_vmem_bytes,
+        wave_block_pallas,
+    )
+    from repro.kernels.stencil.ref import (
+        wave_block_shots_strips_ref,
+        wave_block_strips_ref,
+    )
+    from repro.launch.hlo_cost import shot_batch_strip_bytes
+
+    cfg = FWIConfig()
+    S, k = cfg.n_shots, pick_k(cfg.nz)
+    st = ShotState.init(cfg)
+
+    vmapped = _vmapped_block_runner(cfg, k)
+    batched = make_block_runner(cfg, k=k)
+    xla = {
+        "xla_vmapped": lambda: jax.block_until_ready(
+            vmapped(st.p, st.p_prev, 0, steps)),
+        "xla_batched": lambda: jax.block_until_ready(
+            batched(st.p, st.p_prev, 0, steps)),
+    }
+    best = _interleaved_best(xla, rounds=rounds)
+    sps = {nm: steps / t for nm, t in best.items()}
+
+    # Pallas rows: per-block timing (interpret mode is the CPU stand-in
+    # for the TPU kernel; one block = k timesteps)
+    v = velocity_model(cfg)
+    v2dt2 = (v * cfg.dt / cfg.dx) ** 2
+    sponge = sponge_taper(cfg)
+    srcv = ricker(cfg)[:k] * (cfg.dt ** 2)
+    pos = cfg.shot_positions()
+    sz = jnp.asarray(pos[:, 0])
+    sx = jnp.asarray(pos[:, 1])
+    bz = pick_bz_block(cfg.nz, k)
+    tile = pick_shot_tile(S, cfg.nz, cfg.nx, k, bz=bz)
+    sbz = pick_bz_stream(cfg.nz, cfg.nx, k, s=S)
+
+    def one(a, b, zi, xi):
+        return wave_block_pallas(a, b, v2dt2, sponge, srcv, zi, xi,
+                                 receiver_row=cfg.receiver_depth, bz=bz)
+
+    vm = jax.jit(jax.vmap(one, (0, 0, 0, 0)))
+    pal = {
+        "pallas_vmapped": lambda: jax.block_until_ready(
+            vm(st.p, st.p_prev, sz, sx)),
+        f"pallas_batched_tile{tile}": lambda: jax.block_until_ready(
+            wave_block(st.p, st.p_prev, v2dt2, sponge, srcv, sz, sx,
+                       receiver_row=cfg.receiver_depth, use_pallas=True,
+                       bz=bz, stream=False)),
+        f"pallas_batched_stream_s{S}": lambda: jax.block_until_ready(
+            wave_block(st.p, st.p_prev, v2dt2, sponge, srcv, sz, sx,
+                       receiver_row=cfg.receiver_depth, use_pallas=True,
+                       stream=True, shot_tile=S)),
+    }
+    pbest = _interleaved_best(pal, rounds=pallas_rounds)
+    sps.update({nm: k / t for nm, t in pbest.items()})
+    pal_batched = {nm: s for nm, s in sps.items()
+                   if nm.startswith("pallas_batched")}
+    pal_head = max(pal_batched, key=pal_batched.get)
+
+    # big tier: the batch cannot sit resident — streaming is mandatory
+    bnz, bnx, bS, bk = SHOT_BATCH_BIG_GRID
+    bcfg = FWIConfig(nz=bnz, nx=bnx, n_shots=bS, timesteps=max(bk, 8))
+    bst = ShotState.init(bcfg)
+    bv = velocity_model(bcfg)
+    bv2dt2 = (bv * bcfg.dt / bcfg.dx) ** 2
+    bsponge = sponge_taper(bcfg)
+    bsrcv = ricker(bcfg)[:bk] * (bcfg.dt ** 2)
+    bpos = bcfg.shot_positions()
+    bsz = jnp.asarray(bpos[:, 0])
+    bsx = jnp.asarray(bpos[:, 1])
+    bsbz1 = pick_bz_stream(bnz, bnx, bk)        # per-shot strip
+    bsbzS = pick_bz_stream(bnz, bnx, bk, s=bS)  # batched strip
+
+    def big_one(a, b, zi, xi):
+        return wave_block_strips_ref(a, b, bv2dt2, bsponge, bsrcv, zi, xi,
+                                     receiver_row=bcfg.receiver_depth,
+                                     bz=bsbz1)
+
+    big_vm = jax.jit(jax.vmap(big_one, (0, 0, 0, 0)))
+    big_batched = jax.jit(functools.partial(
+        wave_block_shots_strips_ref, receiver_row=bcfg.receiver_depth,
+        bz=bsbz1))
+    big = {
+        "xla_vmapped_strips": lambda: jax.block_until_ready(
+            big_vm(bst.p, bst.p_prev, bsz, bsx)),
+        "xla_batched_strips": lambda: jax.block_until_ready(
+            big_batched(bst.p, bst.p_prev, bv2dt2, bsponge, bsrcv,
+                        bsz, bsx)),
+        "pallas_vmapped_stream": lambda: jax.block_until_ready(
+            jax.tree_util.tree_map(lambda *a: jnp.stack(a), *[
+                wave_block(bst.p[i], bst.p_prev[i], bv2dt2, bsponge,
+                           bsrcv, bsz[i], bsx[i],
+                           receiver_row=bcfg.receiver_depth,
+                           use_pallas=True, stream=True, bz=bsbz1)
+                for i in range(bS)])),
+        "pallas_batched_stream": lambda: jax.block_until_ready(
+            wave_block(bst.p, bst.p_prev, bv2dt2, bsponge, bsrcv,
+                       bsz, bsx, receiver_row=bcfg.receiver_depth,
+                       use_pallas=True, stream=True, shot_tile=bS,
+                       bz=bsbzS)),
+    }
+    bbest = _interleaved_best(big, rounds=max(pallas_rounds - 1, 1))
+    big_sps = {nm: bk / t for nm, t in bbest.items()}
+
+    return {
+        "tier": "shot_batch",
+        "config": {"nz": cfg.nz, "nx": cfg.nx, "n_shots": S, "k": k,
+                   "bz": bz, "shot_tile": tile, "stream_bz": sbz,
+                   "timesteps_measured": steps},
+        "host_parallel_scaling": round(host_parallel_scaling(), 2),
+        "steps_per_sec": {nm: round(v, 2) for nm, v in sps.items()},
+        "batched_vs_vmapped": {
+            "xla": round(sps["xla_batched"] / sps["xla_vmapped"], 3),
+            "pallas": round(sps[pal_head] / sps["pallas_vmapped"], 3),
+            "pallas_engine": pal_head,
+        },
+        "vmem": {
+            "budget_bytes": DEFAULT_VMEM_BUDGET,
+            "resident_bytes_s1": resident_vmem_bytes(
+                cfg.nz, cfg.nx, k, bz=bz),
+            "resident_bytes_sS": resident_vmem_bytes(
+                cfg.nz, cfg.nx, k, bz=bz, s=S),
+            "resident_bytes_tile": resident_vmem_bytes(
+                cfg.nz, cfg.nx, k, bz=bz, s=tile),
+            "stream_bytes_sS": stream_vmem_bytes(
+                cfg.nz, cfg.nx, sbz, k, s=S),
+            "shot_tile": tile,
+        },
+        "traffic_model": {nm: val for nm, val in
+                          shot_batch_strip_bytes(cfg.nz, cfg.nx, S,
+                                                 k=k).items()},
+        "big": {
+            "config": {"nz": bnz, "nx": bnx, "n_shots": bS, "k": bk,
+                       "stream_bz_s1": bsbz1, "stream_bz_sS": bsbzS},
+            "steps_per_sec": {nm: round(v, 3)
+                              for nm, v in big_sps.items()},
+            "batched_vs_vmapped": {
+                "xla": round(big_sps["xla_batched_strips"]
+                             / big_sps["xla_vmapped_strips"], 3),
+                "pallas": round(big_sps["pallas_batched_stream"]
+                                / big_sps["pallas_vmapped_stream"], 3),
+            },
+            "vmem": {
+                "budget_bytes": DEFAULT_VMEM_BUDGET,
+                "resident_bytes_sS": resident_vmem_bytes(
+                    bnz, bnx, bk, s=bS),
+                "stream_bytes_sS": stream_vmem_bytes(
+                    bnz, bnx, bsbzS, bk, s=bS),
+            },
+            "traffic_model": shot_batch_strip_bytes(bnz, bnx, bS, k=bk),
+        },
+    }
+
+
+def run_shot_batch() -> list[str]:
+    """The shot-batch tier as harness rows."""
+    point = shot_batch_point()
+    rows = [f"shot_batch.host_parallel_scaling,0,"
+            f"{point['host_parallel_scaling']}"]
+    for nm, v in point["steps_per_sec"].items():
+        rows.append(f"shot_batch.{nm}_steps_per_sec,0,{v}")
+    bb = point["batched_vs_vmapped"]
+    rows.append(f"shot_batch.batched_vs_vmapped_xla,0,{bb['xla']}")
+    rows.append(f"shot_batch.batched_vs_vmapped_pallas,0,{bb['pallas']}")
+    vm = point["vmem"]
+    rows.append(
+        f"shot_batch.vmem,0,"
+        f"tile={vm['shot_tile']};"
+        f"resident_sS_mb={vm['resident_bytes_sS'] / 2**20:.1f};"
+        f"tile_mb={vm['resident_bytes_tile'] / 2**20:.1f};"
+        f"stream_sS_mb={vm['stream_bytes_sS'] / 2**20:.1f};"
+        f"budget_mb={vm['budget_bytes'] / 2**20:.0f}"
+    )
+    tm = point["traffic_model"]
+    rows.append(
+        f"shot_batch.traffic_ratio,0,{tm['traffic_ratio']:.4f}"
+    )
+    for nm, v in point["big"]["steps_per_sec"].items():
+        rows.append(f"shot_batch.big.{nm}_steps_per_sec,0,{v}")
+    bigbb = point["big"]["batched_vs_vmapped"]
+    rows.append(f"shot_batch.big.batched_vs_vmapped_pallas,0,"
+                f"{bigbb['pallas']}")
+    return rows
+
+
 def run() -> list[str]:
     rows = []
     cfg = FWIConfig()                      # paper Table 2: 600x600, 4 shots
@@ -455,10 +717,16 @@ if __name__ == "__main__":
     import json
 
     big = "--big" in sys.argv
-    argv = [a for a in sys.argv if a != "--big"]
+    shot_batch = "--shot-batch" in sys.argv
+    argv = [a for a in sys.argv if a not in ("--big", "--shot-batch")]
     if len(argv) > 1 and argv[1] == "--write-trajectory":
         path = argv[2] if len(argv) > 2 else "BENCH_fwi.json"
-        point = big_trajectory_point() if big else trajectory_point()
+        if shot_batch:
+            point = shot_batch_point()
+        elif big:
+            point = big_trajectory_point()
+        else:
+            point = trajectory_point()
         try:
             with open(path) as f:
                 doc = json.load(f)
@@ -470,5 +738,11 @@ if __name__ == "__main__":
             json.dump(doc, f, indent=1)
         print(f"wrote {path} ({len(doc['points'])} points)")
     else:
-        for row in (run_big() if big else run()):
+        if shot_batch:
+            rows = run_shot_batch()
+        elif big:
+            rows = run_big()
+        else:
+            rows = run()
+        for row in rows:
             print(row)

@@ -2,7 +2,13 @@
 
 Reads artifacts/dryrun/*/<arch>/<shape>.json produced by
 repro.launch.dryrun and emits one row per cell plus aggregates.  Run the
-dry-run first: `python -m repro.launch.dryrun --all`."""
+dry-run first: `python -m repro.launch.dryrun --all`.
+
+Also emits the ANALYTIC shot-batch traffic model rows
+(``launch.hlo_cost.shot_batch_strip_bytes``, DESIGN.md §17) — no
+artifacts needed: the memory-bound ceiling of batching S shots into one
+stencil sweep, i.e. how much of the ``4·S → 2·S + 2`` array-read drop
+a perfectly memory-bound engine could bank."""
 from __future__ import annotations
 
 import json
@@ -11,11 +17,30 @@ from pathlib import Path
 ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 
 
-def run() -> list[str]:
+def shot_batch_rows(nz: int = 600, nx: int = 600,
+                    s_values: tuple[int, ...] = (1, 2, 4, 8)) -> list[str]:
+    """traffic-model rows: batched-vs-vmapped HBM bytes per sweep."""
+    from repro.launch.hlo_cost import shot_batch_strip_bytes
+
     rows = []
+    for s in s_values:
+        m = shot_batch_strip_bytes(nz, nx, s)
+        rows.append(
+            f"roofline.shot_batch.{nz}x{nx}.s{s}.traffic_ratio,"
+            f"{m['batched_bytes'] / 1e6:.1f},{m['traffic_ratio']:.4f}"
+        )
+        rows.append(
+            f"roofline.shot_batch.{nz}x{nx}.s{s}.launch_ratio,"
+            f"{m['launches_batched']},{m['launches_vmapped']}"
+        )
+    return rows
+
+
+def run() -> list[str]:
+    rows = shot_batch_rows()
     cells = sorted(ARTIFACTS.glob("*/*/*.json"))
     if not cells:
-        return ["roofline.no_artifacts_run_dryrun_first,0,0"]
+        return rows + ["roofline.no_artifacts_run_dryrun_first,0,0"]
     n_ok = n_skip = n_err = 0
     worst = (2.0, None)
     for p in cells:

@@ -52,6 +52,44 @@ if "--xla_force_host_platform_device_count" not in _flags:
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
+# Persistent XLA compilation cache: the harness compiles dozens of
+# executables that are byte-identical run to run — warm re-runs (and
+# the CI bench smoke) load them from disk instead of recompiling.
+# The dir follows JAX_COMPILATION_CACHE_DIR when set (ci.sh exports a
+# workspace-local one); hit/miss counts come from the cache's own
+# on-disk entries: every served entry touches its ``*-atime`` marker,
+# every compile writes a new ``*-cache`` file (jax has no public
+# counter API on this version, so the preamble counts files).
+CACHE_DIR = os.environ.get(
+    "JAX_COMPILATION_CACHE_DIR",
+    str(Path(__file__).resolve().parents[1] / ".jax_cache"),
+)
+
+
+def _enable_compilation_cache() -> None:
+    import jax
+
+    jax.config.update("jax_compilation_cache_dir", CACHE_DIR)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+
+
+def _cache_counts(since: float) -> tuple[int, int]:
+    """(hits, misses) since ``since``: touched atime markers vs new
+    cache entries."""
+    touched = misses = 0
+    try:
+        for f in os.listdir(CACHE_DIR):
+            p = os.path.join(CACHE_DIR, f)
+            if f.endswith("-atime") and os.path.getmtime(p) >= since:
+                touched += 1
+            elif f.endswith("-cache") and os.path.getmtime(p) >= since:
+                misses += 1
+    except OSError:
+        pass
+    # a fresh compile writes BOTH files, so its atime touch is not a hit
+    return max(touched - misses, 0), misses
+
 from benchmarks import (  # noqa: E402
     bench_burst_deadline,
     bench_capacity_fit,
@@ -129,6 +167,15 @@ def main(argv: list[str] | None = None) -> None:
         ap.error(f"unknown bench(es): {sorted(unknown)}")
     selected = [(n, m) for n, m in benches if not only or n in only]
 
+    _enable_compilation_cache()
+    import time as _time
+    t_start = _time.time()
+    n_existing = sum(1 for f in os.listdir(CACHE_DIR)
+                     if f.endswith("-cache")) if os.path.isdir(CACHE_DIR) \
+        else 0
+    print(f"# jax compilation cache: {CACHE_DIR} "
+          f"({n_existing} entries on disk)", file=sys.stderr)
+
     print("name,us_per_call,derived")
     failures = 0
     results: dict[str, list[dict]] = {}
@@ -144,11 +191,16 @@ def main(argv: list[str] | None = None) -> None:
             errors[name] = repr(e)
             print(f"{name}.FAILED,0,{e!r}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    hits, misses = _cache_counts(t_start)
+    print(f"# jax compilation cache: {hits} hits, {misses} misses "
+          f"this run", file=sys.stderr)
     if args.json:
         doc = {
             "benches": results,
             "failures": failures,
             "errors": errors,
+            "compilation_cache": {"dir": CACHE_DIR, "hits": hits,
+                                  "misses": misses},
         }
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1)

@@ -1,15 +1,18 @@
 #!/usr/bin/env python
-"""Statement-coverage floor for the ``repro.sim`` package.
+"""Per-package statement-coverage floors for the repro codebase.
 
-CI gates the fleet layer (DESIGN.md §16) on a minimum statement
-coverage from its own test modules.  When ``pytest-cov`` is installed
-this delegates to ``pytest --cov=repro.sim --cov-fail-under``;
-otherwise (the default container has no coverage tooling) it falls
-back to the stdlib ``trace`` module: run the fleet test modules under
-a line tracer, intersect the executed lines with each sim module's
-executable lines, and enforce the same floor.
+CI gates each package in ``GATES`` on a minimum statement coverage
+from its own test modules: the fleet layer (DESIGN.md §16) at 90%,
+and the shot-batched stencil engine + FWI solver (DESIGN.md §17) at
+85%.  When ``pytest-cov`` is installed this delegates to
+``pytest --cov=<pkg> --cov-fail-under``; otherwise (the default
+container has no coverage tooling) it falls back to the stdlib
+``trace`` module: run the gate's test modules under a line tracer,
+intersect the executed lines with each module's executable lines, and
+enforce the same floor.  Traced runs are cached per test set, so gates
+that share tests pay the (10-30x slower under trace) run once.
 
-Usage:  PYTHONPATH=src python scripts/simcov.py [--floor PCT]
+Usage:  PYTHONPATH=src python scripts/simcov.py [--only PKG[,PKG...]]
 """
 from __future__ import annotations
 
@@ -20,10 +23,34 @@ import subprocess
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
-SIM_DIR = ROOT / "src" / "repro" / "sim"
-#: fleet-layer test modules — fast, pure-Python, exercise repro.sim
-TESTS = ["tests/test_fleet.py", "tests/test_fleet_properties.py"]
-DEFAULT_FLOOR = 90.0
+
+#: (dotted target, floor %, test modules).  A target may be a package
+#: directory or a single module; tests are chosen fast-but-relevant —
+#: jax-heavy suites run 10-30x slower under ``trace``, so each gate
+#: lists the smallest set that genuinely exercises its target.
+GATES = [
+    ("repro.sim", 90.0,
+     ("tests/test_fleet.py", "tests/test_fleet_properties.py")),
+    ("repro.kernels.stencil", 85.0,
+     ("tests/test_kernels.py", "tests/test_shot_batch.py",
+      "tests/test_streamed_kernel.py", "tests/test_fwi.py",
+      "tests/test_fused_engine.py")),
+    ("repro.fwi.solver", 85.0,
+     ("tests/test_kernels.py", "tests/test_shot_batch.py",
+      "tests/test_streamed_kernel.py", "tests/test_fwi.py",
+      "tests/test_fused_engine.py")),
+]
+
+
+def _target_files(dotted: str) -> list[pathlib.Path]:
+    """Source files a dotted target covers (package dir or module)."""
+    base = ROOT / "src" / pathlib.Path(*dotted.split("."))
+    if base.is_dir():
+        return sorted(base.glob("*.py"))
+    mod = base.with_suffix(".py")
+    if mod.is_file():
+        return [mod]
+    raise SystemExit(f"simcov: no such target {dotted!r} ({base})")
 
 
 def _have_pytest_cov() -> bool:
@@ -34,72 +61,93 @@ def _have_pytest_cov() -> bool:
     return True
 
 
-def _run_with_pytest_cov(floor: float) -> int:
+def _run_with_pytest_cov(gates) -> int:
     env = dict(os.environ)
     env["PYTHONPATH"] = f"{ROOT / 'src'}" + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
     )
-    cmd = [
-        sys.executable, "-m", "pytest", "-q",
-        "--cov=repro.sim", f"--cov-fail-under={floor:g}", *TESTS,
-    ]
-    return subprocess.call(cmd, cwd=ROOT, env=env)
+    rc = 0
+    for dotted, floor, tests in gates:
+        cmd = [
+            sys.executable, "-m", "pytest", "-q",
+            f"--cov={dotted}", f"--cov-fail-under={floor:g}", *tests,
+        ]
+        rc = subprocess.call(cmd, cwd=ROOT, env=env) or rc
+    return rc
 
 
-def _run_with_trace(floor: float) -> int:
+def _traced_lines(tests: tuple[str, ...],
+                  _cache: dict = {}) -> dict[str, set[int]]:
+    """Executed lines per absolute filename for one traced test run."""
+    if tests in _cache:
+        return _cache[tests]
     import trace
 
     import pytest
 
-    os.chdir(ROOT)
-    sys.path.insert(0, str(ROOT / "src"))
     # NB: no ignoredirs — trace._Ignore caches decisions by bare module
     # name, so ignoring stdlib ``queue.py``/``__init__.py`` would also
     # silently ignore repro/sim/queue.py and repro/sim/__init__.py
     tracer = trace.Trace(count=1, trace=0)
     rc = tracer.runfunc(
-        pytest.main, ["-q", "-p", "no:cacheprovider", *TESTS]
+        pytest.main, ["-q", "-p", "no:cacheprovider", *tests]
     )
     if rc not in (0,):
-        print(f"simcov: test run failed (exit {rc})", file=sys.stderr)
-        return int(rc)
-
+        raise SystemExit(f"simcov: test run failed (exit {rc}): {tests}")
     executed: dict[str, set[int]] = {}
     for (fn, lineno), cnt in tracer.results().counts.items():
         if cnt > 0:
             executed.setdefault(os.path.abspath(fn), set()).add(lineno)
+    _cache[tests] = executed
+    return executed
 
-    tot_hit = tot_exec = 0
-    print(f"{'module':<28}{'stmts':>7}{'hit':>7}{'cover':>8}")
-    for py in sorted(SIM_DIR.glob("*.py")):
-        fn = str(py.resolve())
-        # executable line numbers straight from the code objects — the
-        # same analysis `trace --count --missing` reports against
-        lnos = set(trace._find_executable_linenos(fn))
-        hit = executed.get(fn, set()) & lnos
-        pct = 100.0 * len(hit) / len(lnos) if lnos else 100.0
-        tot_hit += len(hit)
-        tot_exec += len(lnos)
-        print(f"{py.name:<28}{len(lnos):>7}{len(hit):>7}{pct:>7.1f}%")
-    total_pct = 100.0 * tot_hit / tot_exec if tot_exec else 100.0
-    print(f"{'TOTAL':<28}{tot_exec:>7}{tot_hit:>7}{total_pct:>7.1f}%")
-    if total_pct < floor:
-        print(
-            f"simcov: repro.sim coverage {total_pct:.1f}% is below the "
-            f"{floor:g}% floor", file=sys.stderr,
-        )
-        return 1
-    print(f"simcov OK: repro.sim {total_pct:.1f}% >= {floor:g}% floor")
-    return 0
+
+def _run_with_trace(gates) -> int:
+    import trace
+
+    os.chdir(ROOT)
+    sys.path.insert(0, str(ROOT / "src"))
+    failed = []
+    for dotted, floor, tests in gates:
+        executed = _traced_lines(tests)
+        tot_hit = tot_exec = 0
+        print(f"-- {dotted} (floor {floor:g}%, tests: "
+              f"{', '.join(t.rsplit('/', 1)[-1] for t in tests)})")
+        print(f"{'module':<28}{'stmts':>7}{'hit':>7}{'cover':>8}")
+        for py in _target_files(dotted):
+            fn = str(py.resolve())
+            # executable line numbers straight from the code objects —
+            # the same analysis `trace --count --missing` reports on
+            lnos = set(trace._find_executable_linenos(fn))
+            hit = executed.get(fn, set()) & lnos
+            pct = 100.0 * len(hit) / len(lnos) if lnos else 100.0
+            tot_hit += len(hit)
+            tot_exec += len(lnos)
+            print(f"{py.name:<28}{len(lnos):>7}{len(hit):>7}{pct:>7.1f}%")
+        pct = 100.0 * tot_hit / tot_exec if tot_exec else 100.0
+        print(f"{'TOTAL':<28}{tot_exec:>7}{tot_hit:>7}{pct:>7.1f}%")
+        if pct < floor:
+            failed.append((dotted, pct, floor))
+            print(f"simcov: {dotted} coverage {pct:.1f}% is below the "
+                  f"{floor:g}% floor", file=sys.stderr)
+        else:
+            print(f"simcov OK: {dotted} {pct:.1f}% >= {floor:g}% floor")
+    return 1 if failed else 0
 
 
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--floor", type=float, default=DEFAULT_FLOOR)
+    ap.add_argument("--only", default="",
+                    help="comma-separated dotted targets to gate")
     args = ap.parse_args(argv)
+    only = {s for s in args.only.split(",") if s}
+    gates = [g for g in GATES if not only or g[0] in only]
+    unknown = only - {g[0] for g in gates}
+    if unknown:
+        ap.error(f"unknown target(s): {sorted(unknown)}")
     if _have_pytest_cov():
-        return _run_with_pytest_cov(args.floor)
-    return _run_with_trace(args.floor)
+        return _run_with_pytest_cov(gates)
+    return _run_with_trace(gates)
 
 
 if __name__ == "__main__":

@@ -168,3 +168,54 @@ class ThroughputModel:
 
     def chips_for_step_time(self, t_step: float) -> float:
         return self.work_per_step / max(t_step, 1e-12)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShotBatchModel:
+    """Affine shot-batch throughput law fitted from measured S-scaling:
+
+        t_step(s) = a + b·s        (seconds per timestep, whole batch)
+
+    ``a`` is the per-step cost the batch AMORTIZES — kernel launches /
+    grid passes plus the shared model-field traffic the batched engine
+    charges once (DESIGN.md §17); ``b`` is the irreducible per-shot
+    cost (each shot's own wavefield reads/writes and stencil math).
+    Feeding the planner this law instead of the naive ``s·t_step(1)``
+    makes BurstPlanner's deadline calculus reflect the REAL batched
+    engine: per-shot time falls as ``a/s + b``, so splitting a shot
+    batch across more devices buys less than linear once ``a`` is
+    amortized away."""
+
+    a: float               # s/step, batch-amortized overhead
+    b: float               # s/step/shot, irreducible per-shot work
+    name: str = ""
+
+    @staticmethod
+    def fit(s_values: Sequence[float], t_steps: Sequence[float],
+            name: str = "") -> "ShotBatchModel":
+        """Least-squares fit of t_step(s) = a + b·s over measured
+        (batch size, per-step wall clock) points; a is clamped at 0 so
+        a noisily super-linear measurement can't imply negative
+        overhead."""
+        assert len(s_values) == len(t_steps) >= 2, (s_values, t_steps)
+        n = float(len(s_values))
+        ms = sum(s_values) / n
+        mt = sum(t_steps) / n
+        var = sum((s - ms) ** 2 for s in s_values)
+        cov = sum((s - ms) * (t - mt)
+                  for s, t in zip(s_values, t_steps))
+        b = cov / var if var else 0.0
+        a = max(mt - b * ms, 0.0)
+        return ShotBatchModel(a=a, b=b, name=name)
+
+    def t_step(self, s: float) -> float:
+        """Seconds per timestep advancing a batch of ``s`` shots."""
+        return self.a + self.b * max(s, 0.0)
+
+    def per_shot_step_time(self, s: float) -> float:
+        return self.t_step(s) / max(s, 1e-12)
+
+    def amortization(self, s: float) -> float:
+        """Speedup of the s-batch over s separate single-shot runs —
+        the measured analogue of the traffic model's ratio."""
+        return (s * self.t_step(1.0)) / max(self.t_step(s), 1e-12)

@@ -238,21 +238,21 @@ def _sharded_block_parts(cfg: FWIConfig, mesh: Mesh, k: int,
         # wx0: local column of window column 0 (traced).  Sources
         # inject into EVERY window covering their column, so redundant
         # zones track true neighbor physics; each window's valid region
-        # is stitched disjointly below.
+        # is stitched disjointly below.  The whole shot batch advances
+        # in ONE shot-batched wave_block (3-D dispatch, DESIGN.md §17)
+        # with per-shot (S, k) amplitudes masked by window coverage —
+        # bitwise-equal to the old vmap-of-per-shot form on the XLA
+        # path (wave_block_shots_ref's pinned contract).
         w = px.shape[-1]
-
-        def one(a, b, zi, xi):
-            xloc = xi - x0 - wx0
-            covered = (xloc >= 0) & (xloc < w)
-            sv = jnp.where(covered, srcv, 0.0)
-            xc = jnp.clip(xloc, 0, w - 1)
-            return wave_block(
-                a, b, vw, sw, sv, zi, xc,
-                receiver_row=cfg.receiver_depth,
-                use_pallas=use_pallas, bz=bz,
-            )
-
-        return jax.vmap(one, in_axes=(0, 0, 0, 0))(px, ppx, src_z, src_x)
+        xloc = src_x - x0 - wx0                  # (S,) per-shot column
+        covered = (xloc >= 0) & (xloc < w)
+        sv = jnp.where(covered[:, None], srcv[None, :], 0.0)
+        xc = jnp.clip(xloc, 0, w - 1)
+        return wave_block(
+            px, ppx, vw, sw, sv, src_z, xc,
+            receiver_row=cfg.receiver_depth,
+            use_pallas=use_pallas, bz=bz,
+        )
 
     def interior(p, p_prev, v2e, spe, x0, srcv):
         # valid after k steps: columns [pad, nxl-pad) — everything the

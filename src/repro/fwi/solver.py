@@ -198,12 +198,21 @@ def make_scan_runner(cfg: FWIConfig, *, use_pallas: bool = False,
 def _block_scan_body(cfg: FWIConfig, k: int, use_pallas: bool,
                      bz: int | None, collect_traces: bool,
                      stream: bool | None = None,
-                     vmem_budget: int | None = None):
+                     vmem_budget: int | None = None,
+                     shot_tile: int | None = None):
     """Shared scan-over-fused-blocks body: local_run(p, p_prev, src_z,
     src_x, t0, steps static) -> (p, p_prev[, traces]) — UNJITTED, so
     both the single-host and the shot-sharded runner jit at their own
     boundary.  Source positions are arguments (not closure) so a
-    shot-sharded caller can pass its local shard's sources."""
+    shot-sharded caller can pass its local shard's sources.
+
+    The whole shot batch advances through ONE shot-batched
+    ``wave_block`` call per block (the 3-D dispatch, DESIGN.md §17) —
+    not a ``vmap`` over per-shot kernels — so the shared model fields
+    are read once per strip for all local shots and the batch costs one
+    kernel launch per block.  Bit-identical to the old vmapped body on
+    the XLA path (``wave_block_shots_ref`` is pinned bitwise vs
+    ``vmap``-of-``wave_block_ref``)."""
     v = velocity_model(cfg)
     v2dt2 = (v * cfg.dt / cfg.dx) ** 2
     sponge = sponge_taper(cfg)
@@ -213,17 +222,12 @@ def _block_scan_body(cfg: FWIConfig, k: int, use_pallas: bool,
         srcv = wavelet[
             jnp.clip(t0b + jnp.arange(kk), 0, cfg.timesteps - 1)
         ] * (cfg.dt ** 2)
-
-        def one(a, b, zi, xi):
-            return wave_block(
-                a, b, v2dt2, sponge, srcv, zi, xi,
-                receiver_row=cfg.receiver_depth,
-                use_pallas=use_pallas, bz=bz,
-                stream=stream, vmem_budget=vmem_budget,
-            )
-
-        return jax.vmap(one, in_axes=(0, 0, 0, 0))(
-            p, p_prev, src_z, src_x
+        return wave_block(
+            p, p_prev, v2dt2, sponge, srcv, src_z, src_x,
+            receiver_row=cfg.receiver_depth,
+            use_pallas=use_pallas, bz=bz,
+            stream=stream, vmem_budget=vmem_budget,
+            shot_tile=shot_tile,
         )
 
     def local_run(p, p_prev, src_z, src_x, t0, steps: int):
@@ -261,7 +265,8 @@ def make_block_runner(cfg: FWIConfig, *, k: int | None = None,
                       use_pallas: bool = False, bz: int | None = None,
                       collect_traces: bool = True,
                       stream: bool | None = None,
-                      vmem_budget: int | None = None):
+                      vmem_budget: int | None = None,
+                      shot_tile: int | None = None):
     """jit-once FUSED multi-step propagator: ``lax.scan`` over k-step
     fused blocks (one ``wave_block`` per block — DESIGN.md §13).
 
@@ -274,14 +279,15 @@ def make_block_runner(cfg: FWIConfig, *, k: int | None = None,
     tiling for production grids keeps that contract via
     ``wave_block_strips_ref``, see DESIGN.md §15).  Memoized on the
     FULL knob set (cfg, k, bz, use_pallas, collect_traces, stream,
-    vmem_budget) so autotuned variants don't collide in the cache."""
+    vmem_budget, shot_tile) so autotuned variants don't collide in the
+    cache."""
     if k is None:
         k = pick_k(cfg.nz)
     pos = cfg.shot_positions()
     src_z = jnp.asarray(pos[:, 0])
     src_x = jnp.asarray(pos[:, 1])
     local_run = _block_scan_body(cfg, k, use_pallas, bz, collect_traces,
-                                 stream, vmem_budget)
+                                 stream, vmem_budget, shot_tile)
 
     @functools.partial(jax.jit, static_argnames=("steps",))
     def run(p, p_prev, t0, steps: int):
@@ -298,18 +304,29 @@ def make_shot_parallel_runner(cfg: FWIConfig, n_devices: int, *,
                               bz: int | None = None,
                               collect_traces: bool = True,
                               stream: bool | None = None,
-                              vmem_budget: int | None = None):
+                              vmem_budget: int | None = None,
+                              shot_tile: int | None = None):
     """Fused block runner with the SHOT axis sharded over devices — the
     paper's FIRST-level task-parallel split (§3.1: shots are
     independent), realized on the fused engine (DESIGN.md §13).
 
-    Zero communication: each device owns n_shots/n whole-domain shots
-    and runs the identical scan-over-fused-blocks body on its shard, so
-    parallel efficiency is bounded only by the host (no halos, no
-    redundant columns — the complementary axis to the striped γ-split
-    in fwi/domain.py, which is what cross-ENVIRONMENT placement needs).
+    Zero communication: each device owns its whole-domain shot shard
+    and runs the identical scan-over-fused-blocks body on it (one
+    shot-batched kernel per block — DESIGN.md §17), so parallel
+    efficiency is bounded only by the host (no halos, no redundant
+    columns — the complementary axis to the striped γ-split in
+    fwi/domain.py, which is what cross-ENVIRONMENT placement needs).
     Returns (run, place): run(p, p_prev, t0, steps) as make_block_runner;
     place() shards the (S, NZ, NX) fields on shot axis 0.
+
+    UNEVEN shot splits are supported by remainder placement: when
+    ``n_shots % n_devices != 0`` the batch is padded to the next
+    multiple by replicating shot 0 (positions included), the padded
+    shots propagate as throwaway duplicates, and every output is sliced
+    back to the real ``n_shots`` — so an elastic GROW to a non-divisor
+    device count (4 shots → 3 devices) runs instead of crashing, at the
+    cost of the duplicates' compute.  ``place`` accepts either padded
+    or unpadded fields; ``run`` pads unpadded inputs itself.
 
     Contract: matches the single-host block runner to f32-ULP
     `allclose` (~1e-7 relative), NOT bitwise — the smaller per-device
@@ -322,21 +339,29 @@ def make_shot_parallel_runner(cfg: FWIConfig, n_devices: int, *,
 
     if k is None:
         k = pick_k(cfg.nz)
-    assert cfg.n_shots % n_devices == 0, (cfg.n_shots, n_devices)
+    pad = (-cfg.n_shots) % n_devices     # remainder-placement padding
     mesh = jax.make_mesh((n_devices,), ("shot",),
                          devices=jax.devices()[:n_devices])
     pos = cfg.shot_positions()
+    if pad:
+        pos = np.concatenate([pos, np.repeat(pos[:1], pad, axis=0)])
     src_z = jnp.asarray(pos[:, 0])
     src_x = jnp.asarray(pos[:, 1])
     local_run = _block_scan_body(cfg, k, use_pallas, bz, collect_traces,
-                                 stream, vmem_budget)
+                                 stream, vmem_budget, shot_tile)
     out_specs = (
         (P("shot"), P("shot"), P("shot")) if collect_traces
         else (P("shot"), P("shot"))
     )
 
+    def _pad_shots(f):
+        if pad and f.shape[0] == cfg.n_shots:
+            f = jnp.concatenate([f, jnp.repeat(f[:1], pad, axis=0)])
+        return f
+
     @functools.partial(jax.jit, static_argnames=("steps",))
     def run(p, p_prev, t0, steps: int):
+        p, p_prev = _pad_shots(p), _pad_shots(p_prev)
         sm = shard_map(
             lambda a, b, sz, sx, t: local_run(a, b, sz, sx, t, steps),
             mesh=mesh,
@@ -344,12 +369,16 @@ def make_shot_parallel_runner(cfg: FWIConfig, n_devices: int, *,
             out_specs=out_specs,
             check_vma=False,
         )
-        return sm(p, p_prev, src_z, src_x, t0)
+        out = sm(p, p_prev, src_z, src_x, t0)
+        if pad:
+            out = tuple(o[:cfg.n_shots] for o in out)
+        return out
 
     sh = NamedSharding(mesh, P("shot"))
 
     def place(state_fields):
-        return jax.device_put(state_fields, sh)
+        padded = jax.tree_util.tree_map(_pad_shots, state_fields)
+        return jax.device_put(padded, sh)
 
     run.k = k
     return run, place

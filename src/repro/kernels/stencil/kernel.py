@@ -104,9 +104,13 @@ def pick_bz(nz: int, cap: int = 128) -> int:
 
 
 def _shift_x(a, d: int, nx: int):
-    """x-shift with zero boundary fill (shared by both stencil kernels)."""
-    rolled = jnp.roll(a, d, axis=1)
-    idx = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    """x-shift with zero boundary fill (shared by all stencil kernels).
+
+    Operates on the LAST axis so the same helper serves the (win, NX)
+    single-shot windows and the (S, win, NX) shot-batched ones."""
+    ax = a.ndim - 1
+    rolled = jnp.roll(a, d, axis=ax)
+    idx = jax.lax.broadcasted_iota(jnp.int32, a.shape, ax)
     if d > 0:
         return jnp.where(idx >= d, rolled, 0.0)
     return jnp.where(idx < nx + d, rolled, 0.0)
@@ -207,32 +211,39 @@ def pick_bz_block(nz: int, k: int, cap: int = 128) -> int:
 
 
 def resident_vmem_bytes(nz: int, nx: int, k: int = 1,
-                        bz: int | None = None) -> int:
+                        bz: int | None = None, s: int = 1) -> int:
     """VMEM footprint of the RESIDENT (whole-array BlockSpec) design:
-    four whole (NZ, NX) f32 fields fetched once, plus the pipeline's
-    double-buffered output strips and the trace block."""
+    ``2·s`` whole (NZ, NX) f32 wavefields plus the TWO shared model
+    fields fetched once, the pipeline's double-buffered output strips
+    (per shot) and the trace block.  ``s`` is the shot-batch size — the
+    model-field term is charged ONCE regardless of ``s`` (DESIGN.md §17);
+    ``s=1`` reduces to the classic single-shot accounting."""
     bz = min(bz if bz is not None else 128, nz)
-    return 4 * (4 * nz * nx + 2 * 2 * bz * nx + k * nx)
+    return 4 * ((2 * s + 2) * nz * nx + 2 * 2 * s * bz * nx + s * k * nx)
 
 
-def stream_vmem_bytes(nz: int, nx: int, bz: int, k: int) -> int:
-    """VMEM footprint of the STREAMED design: two DMA slots of four
-    (win, NX) haloed f32 windows, the pipeline's double-buffered output
-    strips, and the trace block — O(bz·NX), independent of NZ."""
+def stream_vmem_bytes(nz: int, nx: int, bz: int, k: int, s: int = 1) -> int:
+    """VMEM footprint of the STREAMED design: two DMA slots of
+    ``2·s + 2`` (win, NX) haloed f32 windows (``2·s`` shot-tiled
+    wavefield windows + ONE shared pair of model-field windows), the
+    double-buffered output strips, and the trace block — O(s·bz·NX),
+    independent of NZ.  ``s=1`` reduces to the classic accounting."""
     win = min(bz + 2 * k * HALO, nz)
-    return 4 * (2 * 4 * win * nx + 2 * 2 * bz * nx + k * nx)
+    return 4 * (2 * (2 * s + 2) * win * nx + 2 * 2 * s * bz * nx
+                + s * k * nx)
 
 
 def should_stream(nz: int, nx: int, k: int = 1,
-                  vmem_budget: int | None = None) -> bool:
+                  vmem_budget: int | None = None, s: int = 1) -> bool:
     """True when the whole-array resident design would not fit the VMEM
     budget — the auto-dispatch rule ``ops.wave_block`` applies."""
     budget = vmem_budget if vmem_budget is not None else DEFAULT_VMEM_BUDGET
-    return resident_vmem_bytes(nz, nx, k) > budget
+    return resident_vmem_bytes(nz, nx, k, s=s) > budget
 
 
 def pick_bz_stream(nz: int, nx: int, k: int, *,
-                   vmem_budget: int | None = None, cap: int = 512) -> int:
+                   vmem_budget: int | None = None, cap: int = 512,
+                   s: int = 1) -> int:
     """Strip height for the STREAMED k-step kernel under a VMEM budget.
 
     Largest 8-aligned divisor of nz ≤ cap whose double-buffered haloed
@@ -240,12 +251,13 @@ def pick_bz_stream(nz: int, nx: int, k: int, *,
     before giving up).  Unlike ``pick_bz_block`` there is NO whole-height
     fallback: a strip that cannot be streamed within the budget raises —
     the silent blow-the-budget path is exactly the footgun the streamed
-    design exists to remove."""
+    design exists to remove.  ``s`` sizes the shot-batched variant's
+    windows (``stream_vmem_bytes(..., s=s)``)."""
     budget = vmem_budget if vmem_budget is not None else DEFAULT_VMEM_BUDGET
 
     def fits(b: int) -> bool:
         return (nz % b == 0 and b + 2 * k * HALO <= nz
-                and stream_vmem_bytes(nz, nx, b, k) <= budget)
+                and stream_vmem_bytes(nz, nx, b, k, s=s) <= budget)
 
     aligned = [b for b in range(8, min(cap, nz) + 1, 8) if fits(b)]
     if aligned:
@@ -562,6 +574,336 @@ def wave_block_stream_pallas(
     )(p, p_prev, v2dt2, sponge, srcv, srcp)
 
 
+def _trapezoid_k_steps_shots(
+    cur, prevd, vw, sw, srcv_ref, srcp_ref, tr_ref,
+    *, start, row0, win: int, nx: int, bz: int, k: int, rrow: int,
+):
+    """k fused leapfrog steps on an (S, win, NX) shot-batched window.
+
+    The shot-batched twin of ``_trapezoid_k_steps``, shared by BOTH
+    batched block kernels (resident and streamed): identical trapezoid
+    math vectorized over the leading shot axis, with the shared model
+    windows ``vw``/``sw`` kept 2-D — (win, NX) — and broadcast across
+    shots, so the model fields are read once per strip no matter how
+    many shots ride the batch (DESIGN.md §17).  Source injection and
+    receiver capture are per-shot: ``srcp_ref`` is (S, 2) int32 rows /
+    columns, ``srcv_ref`` is (S, k) amplitudes."""
+    ns = cur.shape[0]
+    zi = srcp_ref[:, 0]                       # (S,) per-shot source row
+    xi = srcp_ref[:, 1]                       # (S,) per-shot source col
+    iz = jax.lax.broadcasted_iota(jnp.int32, (ns, win, nx), 1)
+    ix = jax.lax.broadcasted_iota(jnp.int32, (ns, win, nx), 2)
+    zsel = (zi - start)[:, None, None]
+    xsel = xi[:, None, None]
+    zero_h = jnp.zeros((ns, HALO, nx), cur.dtype)
+    own_receiver = (rrow >= row0) & (rrow < row0 + bz)
+
+    for j in range(k):
+        ext = jnp.concatenate([zero_h, cur, zero_h], axis=1)
+        lap = 2.0 * C0 * cur
+        lap += C1 * (ext[:, HALO - 1: HALO - 1 + win, :]
+                     + ext[:, HALO + 1: HALO + 1 + win, :])
+        lap += C2 * (ext[:, HALO - 2: HALO - 2 + win, :]
+                     + ext[:, HALO + 2: HALO + 2 + win, :])
+        lap += C1 * (_shift_x(cur, 1, nx) + _shift_x(cur, -1, nx))
+        lap += C2 * (_shift_x(cur, 2, nx) + _shift_x(cur, -2, nx))
+        pn = (2.0 * cur - prevd + vw * lap) * sw
+        # epilogue: per-shot source injection + receiver-row capture
+        pn = pn + jnp.where(
+            (iz == zsel) & (ix == xsel), srcv_ref[:, j][:, None, None], 0.0
+        )
+
+        @pl.when(own_receiver)
+        def _capture(pn=pn, j=j):
+            tr_ref[:, j, :] = jax.lax.dynamic_slice_in_dim(
+                pn, rrow - start, 1, axis=1
+            )[:, 0, :]
+
+        prevd = cur * sw
+        cur = pn
+    return cur, prevd
+
+
+def _wave_block_shots_kernel(
+    p_ref, pp_ref, v2dt2_ref, sponge_ref, srcv_ref, srcp_ref,
+    p_out_ref, pp_out_ref, tr_ref,
+    *, bz: int, win: int, k: int, rrow: int,
+):
+    """Shot-batched ``_wave_block_kernel``: each program owns an
+    (S, bz, NX) strip and computes the k-step trapezoid on (S, win, NX)
+    windows sliced from the resident wavefields, while the model fields
+    stay 2-D and are sliced ONCE per strip for all shots."""
+    i = pl.program_id(0)
+    nz = p_ref.shape[1]
+    nx = p_ref.shape[2]
+    row0 = i * bz
+    start = jnp.clip(row0 - k * HALO, 0, nz - win)
+    off = row0 - start          # strip offset inside the window
+
+    cur = p_ref[:, pl.ds(start, win), :]
+    prevd = pp_ref[:, pl.ds(start, win), :]   # already sponge-damped
+    vw = v2dt2_ref[pl.ds(start, win), :]      # shared across shots
+    sw = sponge_ref[pl.ds(start, win), :]
+    cur, prevd = _trapezoid_k_steps_shots(
+        cur, prevd, vw, sw, srcv_ref, srcp_ref, tr_ref,
+        start=start, row0=row0, win=win, nx=nx, bz=bz, k=k, rrow=rrow,
+    )
+
+    p_out_ref[...] = jax.lax.dynamic_slice_in_dim(cur, off, bz, axis=1)
+    pp_out_ref[...] = jax.lax.dynamic_slice_in_dim(prevd, off, bz, axis=1)
+
+
+def _norm_src_shots(src_vals, src_z, src_x, ns: int, dtype):
+    """Normalize batched source args: (k,)-or-(S, k) amplitudes to
+    (S, k), per-shot positions to an (S, 2) int32 block."""
+    srcv = jnp.asarray(src_vals, dtype)
+    if srcv.ndim == 1:
+        srcv = jnp.broadcast_to(srcv, (ns, srcv.shape[0]))
+    srcp = jnp.stack(
+        [jnp.broadcast_to(jnp.asarray(src_z, jnp.int32), (ns,)),
+         jnp.broadcast_to(jnp.asarray(src_x, jnp.int32), (ns,))],
+        axis=1,
+    )
+    return srcv, srcp
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bz", "receiver_row", "interpret")
+)
+def wave_block_shots_pallas(
+    p: jax.Array,          # (S, NZ, NX) f32 shot batch
+    p_prev: jax.Array,     # (S, NZ, NX), already sponge-damped
+    v2dt2: jax.Array,      # (NZ, NX) shared model field
+    sponge: jax.Array,     # (NZ, NX) shared model field
+    src_vals: jax.Array,   # (k,) shared or (S, k) per-shot amplitudes
+    src_z,                 # (S,) int per-shot source rows
+    src_x,                 # (S,) int per-shot source columns
+    *,
+    receiver_row: int = 0,
+    bz: int | None = None,
+    interpret: bool | None = None,
+):
+    """Shot-batched ``wave_block_pallas``: k fused timesteps for ALL S
+    shots in ONE pallas_call.
+
+    One grid pass covers the whole batch — the model fields are fetched
+    once (not once per shot) and every strip's trapezoid is computed for
+    all shots together, so kernel launches and model-field HBM traffic
+    are amortized S-fold vs ``vmap``-of-``wave_block_pallas``
+    (DESIGN.md §17).  Returns (p_k (S, NZ, NX), p_prev_damped_k,
+    traces (S, k, NX)); the S=1 batch is bitwise-equal to the 2-D
+    kernel (pinned by tests)."""
+    ns, nz, nx = p.shape
+    k = int(src_vals.shape[-1])
+    if bz is None:
+        bz = pick_bz_block(nz, k)
+    if interpret is None:
+        interpret = default_interpret()
+    win = min(bz + 2 * k * HALO, nz)
+    assert nz % bz == 0, (nz, bz)
+    assert bz == nz or bz + 2 * k * HALO <= nz, (nz, bz, k)
+    grid = (nz // bz,)
+    whole3 = pl.BlockSpec((ns, nz, nx), lambda i: (0, 0, 0))  # fetched once
+    whole2 = pl.BlockSpec((nz, nx), lambda i: (0, 0))         # model fields
+    strip3 = pl.BlockSpec((ns, bz, nx), lambda i: (0, i, 0))
+    srcv, srcp = _norm_src_shots(src_vals, src_z, src_x, ns, p.dtype)
+    out_shape = [
+        jax.ShapeDtypeStruct((ns, nz, nx), p.dtype),
+        jax.ShapeDtypeStruct((ns, nz, nx), p.dtype),
+        jax.ShapeDtypeStruct((ns, k, nx), p.dtype),
+    ]
+    return pl.pallas_call(
+        functools.partial(
+            _wave_block_shots_kernel, bz=bz, win=win, k=k,
+            rrow=int(receiver_row),
+        ),
+        grid=grid,
+        in_specs=[whole3, whole3, whole2, whole2,
+                  pl.BlockSpec((ns, k), lambda i: (0, 0)),
+                  pl.BlockSpec((ns, 2), lambda i: (0, 0))],
+        out_specs=[strip3, strip3,
+                   pl.BlockSpec((ns, k, nx), lambda i: (0, 0, 0))],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(p, p_prev, v2dt2, sponge, srcv, srcp)
+
+
+def _wave_block_shots_stream_kernel(
+    p_hbm, pp_hbm, v_hbm, s_hbm, srcv_ref, srcp_ref,
+    p_out_ref, pp_out_ref, tr_ref, fwin_buf, mwin_buf, fsems, msems,
+    *, bz: int, win: int, k: int, rrow: int,
+):
+    """Shot-batched STREAMED trapezoid: double-buffered window DMA with
+    a shot-tiled wavefield slot and a SINGLE model-field slot.
+
+    The wavefields stay in HBM as (S, NZ, NX); each grid step DMAs an
+    (S, win, NX) window pair into one of two VMEM slots.  The model
+    fields get their own (2, 2, win, NX) scratch — one (win, NX) window
+    per field per slot, DMA'd ONCE per strip and reused by every shot
+    in the batch, which is exactly the traffic the shot batch exists to
+    amortize (DESIGN.md §17).  Prefetch discipline is identical to
+    ``_wave_block_stream_kernel``: strip i starts strip i+1's fetch
+    into the other slot before waiting on its own."""
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+    nz = p_hbm.shape[1]
+    nx = p_hbm.shape[2]
+
+    def win_start(strip):
+        return jnp.clip(strip * bz - k * HALO, 0, nz - win)
+
+    def dma(slot, strip):
+        start = win_start(strip)
+        copies = [
+            pltpu.make_async_copy(
+                f.at[:, pl.ds(start, win), :],
+                fwin_buf.at[slot, fi],
+                fsems.at[slot, fi],
+            )
+            for fi, f in enumerate((p_hbm, pp_hbm))
+        ]
+        copies += [
+            pltpu.make_async_copy(
+                f.at[pl.ds(start, win), :],
+                mwin_buf.at[slot, fi],
+                msems.at[slot, fi],
+            )
+            for fi, f in enumerate((v_hbm, s_hbm))
+        ]
+        return copies
+
+    @pl.when(i == 0)                 # warm-up: fetch our own window
+    def _warmup():
+        for c in dma(0, 0):
+            c.start()
+
+    @pl.when(i + 1 < n)              # prefetch next strip's window
+    def _prefetch():
+        for c in dma((i + 1) % 2, i + 1):
+            c.start()
+
+    slot = i % 2
+    for c in dma(slot, i):           # wait for our window to land
+        c.wait()
+
+    row0 = i * bz
+    start = win_start(i)
+    off = row0 - start               # strip offset inside the window
+    cur, prevd = _trapezoid_k_steps_shots(
+        fwin_buf[slot, 0], fwin_buf[slot, 1],
+        mwin_buf[slot, 0], mwin_buf[slot, 1],
+        srcv_ref, srcp_ref, tr_ref,
+        start=start, row0=row0, win=win, nx=nx, bz=bz, k=k, rrow=rrow,
+    )
+    p_out_ref[...] = jax.lax.dynamic_slice_in_dim(cur, off, bz, axis=1)
+    pp_out_ref[...] = jax.lax.dynamic_slice_in_dim(prevd, off, bz, axis=1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("receiver_row", "bz", "interpret", "vmem_budget"),
+)
+def wave_block_shots_stream_pallas(
+    p: jax.Array,          # (S, NZ, NX) f32 shot batch
+    p_prev: jax.Array,     # (S, NZ, NX), already sponge-damped
+    v2dt2: jax.Array,      # (NZ, NX) shared model field
+    sponge: jax.Array,     # (NZ, NX) shared model field
+    src_vals: jax.Array,   # (k,) shared or (S, k) per-shot amplitudes
+    src_z,                 # (S,) int per-shot source rows
+    src_x,                 # (S,) int per-shot source columns
+    *,
+    receiver_row: int = 0,
+    bz: int | None = None,
+    interpret: bool | None = None,
+    vmem_budget: int | None = None,
+):
+    """Shot-batched ``wave_block_stream_pallas``: VMEM holds two
+    (S, win, NX) wavefield window slots plus ONE shared (win, NX)
+    model-field slot pair — capacity O(s·bz·NX), independent of NZ.
+
+    Strip height defaults to ``pick_bz_stream(..., s=S)`` (raises
+    rather than fall back to a whole-height resident strip — same
+    no-fallback contract as the single-shot streamed kernel).  Returns
+    (p_k, p_prev_damped_k, traces (S, k, NX))."""
+    ns, nz, nx = p.shape
+    k = int(src_vals.shape[-1])
+    if interpret is None:
+        interpret = default_interpret()
+    if bz is None:
+        bz = pick_bz_stream(nz, nx, k, vmem_budget=vmem_budget, s=ns)
+    budget = vmem_budget if vmem_budget is not None else DEFAULT_VMEM_BUDGET
+    win = bz + 2 * k * HALO
+    assert nz % bz == 0, (nz, bz)
+    assert win <= nz, (nz, bz, k)    # no whole-height fallback, ever
+    assert stream_vmem_bytes(nz, nx, bz, k, s=ns) <= budget, \
+        (nz, nx, bz, k, ns)
+    grid = (nz // bz,)
+    hbm = pl.BlockSpec(memory_space=pltpu.ANY)
+    strip3 = pl.BlockSpec((ns, bz, nx), lambda i: (0, i, 0))
+    srcv, srcp = _norm_src_shots(src_vals, src_z, src_x, ns, p.dtype)
+    out_shape = [
+        jax.ShapeDtypeStruct((ns, nz, nx), p.dtype),
+        jax.ShapeDtypeStruct((ns, nz, nx), p.dtype),
+        jax.ShapeDtypeStruct((ns, k, nx), p.dtype),
+    ]
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            vmem_limit_bytes=budget
+        )
+    return pl.pallas_call(
+        functools.partial(
+            _wave_block_shots_stream_kernel, bz=bz, win=win, k=k,
+            rrow=int(receiver_row),
+        ),
+        grid=grid,
+        in_specs=[hbm, hbm, hbm, hbm,
+                  pl.BlockSpec((ns, k), lambda i: (0, 0)),
+                  pl.BlockSpec((ns, 2), lambda i: (0, 0))],
+        out_specs=[strip3, strip3,
+                   pl.BlockSpec((ns, k, nx), lambda i: (0, 0, 0))],
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((2, 2, ns, win, nx), p.dtype),
+            pltpu.VMEM((2, 2, win, nx), p.dtype),
+            pltpu.SemaphoreType.DMA((2, 2)),
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(p, p_prev, v2dt2, sponge, srcv, srcp)
+
+
+def pick_shot_tile(n_shots: int, nz: int, nx: int, k: int, *,
+                   bz: int | None = None, stream: bool = False,
+                   vmem_budget: int | None = None) -> int:
+    """Largest shot-tile ≤ ``n_shots`` whose batched design fits the
+    VMEM budget — the default ``shot_tile`` the Pallas dispatch in
+    ``ops.wave_block`` uses.
+
+    Resident tiles are sized by ``resident_vmem_bytes(..., s=t)``,
+    streamed tiles by the existence of a streamable strip at ``s=t``
+    (``pick_bz_stream``).  Only divisors of ``n_shots`` are considered,
+    so no tile is ever ragged by default (explicit ``shot_tile`` args
+    may still be unaligned — the dispatch handles the remainder tile).
+    Always ≥ 1: a single shot that cannot fit resident is the streamed
+    path's problem (``should_stream``), not the tile picker's."""
+    budget = vmem_budget if vmem_budget is not None else DEFAULT_VMEM_BUDGET
+
+    def fits(t: int) -> bool:
+        if stream:
+            try:
+                pick_bz_stream(nz, nx, k, vmem_budget=budget, s=t)
+                return True
+            except ValueError:
+                return False
+        b = bz if bz is not None else pick_bz_block(nz, k)
+        return resident_vmem_bytes(nz, nx, k, bz=b, s=t) <= budget
+
+    ok = [t for t in range(1, n_shots + 1) if n_shots % t == 0 and fits(t)]
+    return max(ok) if ok else 1
+
+
 def _tune_backend(backend: str | None) -> str:
     return backend if backend is not None else jax.default_backend()
 
@@ -680,13 +1022,87 @@ def _autotune_stream_cached(
     return best
 
 
+@functools.lru_cache(maxsize=None)
+def _autotune_shots_cached(
+    ns: int, nz: int, nx: int, bz_candidates: tuple[int, ...],
+    k_candidates: tuple[int, ...], tile_candidates: tuple[int, ...],
+    repeats: int, backend: str, stream: bool, budget: int,
+) -> tuple[int, int, int]:
+    key = jax.random.key(0)
+    p = jax.random.normal(key, (ns, nz, nx), jnp.float32)
+    v = jnp.full((nz, nx), 0.1, jnp.float32)
+    s = jnp.ones((nz, nx), jnp.float32)
+    sz = jnp.full((ns,), nz // 2, jnp.int32)
+    sx = jnp.arange(ns, dtype=jnp.int32) % nx
+    best, best_t = None, float("inf")
+    for k in k_candidates:
+        srcv = jnp.zeros((k,), jnp.float32)
+        for t in tile_candidates:
+            if not 1 <= t <= ns:
+                continue
+            if stream:
+                bzs = [b for b in bz_candidates
+                       if nz % b == 0 and b + 2 * k * HALO <= nz
+                       and stream_vmem_bytes(nz, nx, b, k, s=t) <= budget]
+                if not bzs:
+                    try:
+                        bzs = [pick_bz_stream(nz, nx, k,
+                                              vmem_budget=budget, s=t)]
+                    except ValueError:
+                        continue          # no streamable strip at (k, t)
+            else:
+                bzs = [b for b in bz_candidates
+                       if nz % b == 0
+                       and (b + 2 * k * HALO <= nz or b == nz)
+                       and resident_vmem_bytes(nz, nx, k, bz=b,
+                                               s=t) <= budget]
+                if not bzs:
+                    continue              # tile blows the resident budget
+
+            def run(b, t=t, srcv=srcv):
+                outs = []
+                for lo in range(0, ns, t):
+                    hi = min(lo + t, ns)
+                    if stream:
+                        outs.append(wave_block_shots_stream_pallas(
+                            p[lo:hi], p[lo:hi], v, s, srcv,
+                            sz[lo:hi], sx[lo:hi], bz=b,
+                            vmem_budget=budget,
+                        ))
+                    else:
+                        outs.append(wave_block_shots_pallas(
+                            p[lo:hi], p[lo:hi], v, s, srcv,
+                            sz[lo:hi], sx[lo:hi], bz=b,
+                        ))
+                return outs
+
+            for b in bzs:
+                jax.block_until_ready(run(b))          # compile
+                t0 = time.perf_counter()
+                for _ in range(repeats):
+                    out = run(b)
+                jax.block_until_ready(out)
+                # amortized per step per shot
+                dt = (time.perf_counter() - t0) / (repeats * k * ns)
+                if dt < best_t:
+                    best, best_t = (b, k, t), dt
+    if best is None:
+        raise ValueError(
+            f"no (bz, k, shot_tile) candidate fits ns={ns}, nz={nz}, "
+            f"nx={nx} under vmem_budget={budget} (stream={stream})"
+        )
+    return best
+
+
 def autotune_bz_k(
     nz: int, nx: int,
     bz_candidates: tuple[int, ...] = (8, 16, 24, 32, 40, 64, 120, 128),
     k_candidates: tuple[int, ...] = (1, 2, 4, 8),
     repeats: int = 3, backend: str | None = None,
     *, stream: bool | None = None, vmem_budget: int | None = None,
-) -> tuple[int, int]:
+    n_shots: int | None = None,
+    shot_tile_candidates: tuple[int, ...] | None = None,
+):
     """Jointly tune (strip height, fused-block length) for ``wave_block``.
 
     Amortized per-STEP wall clock decides, so longer blocks only win
@@ -699,10 +1115,28 @@ def autotune_bz_k(
     depth) space, where candidates must also fit ``vmem_budget``
     (``stream_vmem_bytes``); ``stream=None`` auto-selects via
     ``should_stream`` — grids whose resident design would blow the
-    budget tune the streamed kernel (DESIGN.md §15)."""
+    budget tune the streamed kernel (DESIGN.md §15).
+
+    ``n_shots`` extends the search to the SHOT-BATCHED engine's
+    ``(bz, k, shot_tile)`` space (DESIGN.md §17): candidates sweep the
+    tile sizes in ``shot_tile_candidates`` (default: the divisors of
+    ``n_shots``), each sized against the s-aware VMEM accounting, and
+    the return value becomes a 3-tuple.  Without ``n_shots`` the
+    classic 2-tuple ``(bz, k)`` is returned, so existing callers are
+    unchanged."""
     budget = vmem_budget if vmem_budget is not None else DEFAULT_VMEM_BUDGET
     if stream is None:
         stream = should_stream(nz, nx, vmem_budget=budget)
+    if n_shots is not None:
+        if shot_tile_candidates is None:
+            shot_tile_candidates = tuple(
+                t for t in range(1, n_shots + 1) if n_shots % t == 0
+            )
+        return _autotune_shots_cached(
+            n_shots, nz, nx, tuple(bz_candidates), tuple(k_candidates),
+            tuple(shot_tile_candidates), repeats, _tune_backend(backend),
+            bool(stream), budget,
+        )
     if stream:
         return _autotune_stream_cached(
             nz, nx, tuple(bz_candidates), tuple(k_candidates), repeats,

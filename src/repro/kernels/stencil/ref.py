@@ -167,6 +167,134 @@ def wave_block_ref(
             jnp.stack(traces))
 
 
+def wave_block_shots_ref(
+    p: jnp.ndarray,        # (S, NZ, NX) shot batch, current pressure
+    p_prev: jnp.ndarray,   # (S, NZ, NX) previous, already sponge-damped
+    v2dt2: jnp.ndarray,    # (NZ, NX) shared model field
+    sponge: jnp.ndarray,   # (NZ, NX) shared model field
+    src_vals: jnp.ndarray,  # (k,) shared or (S, k) per-shot amplitudes
+    src_z,                 # (S,) int per-shot source rows
+    src_x,                 # (S,) int per-shot source columns
+    *,
+    receiver_row: int = 0,
+):
+    """Shot-batched ``wave_block_ref`` — the XLA mirror of the batched
+    Pallas kernel, BIT-IDENTICAL to ``vmap``-of-``wave_block_ref``.
+
+    The whole shot batch advances k steps in one padded-field sweep:
+    the Laplacian slices, leapfrog and sponge are elementwise over the
+    leading shot axis (slicing commutes with the batch, so every shot's
+    value stream is the op-for-op vmap lowering), and the per-shot
+    source injection scatters to ``(shot, z_s, x_s)`` — one element per
+    batch row, so the adds are order-independent and bitwise equal to
+    the per-shot ``at[z, x].add``.  This is the dispatch target
+    ``ops.wave_block`` uses for 3-D inputs on the XLA path, keeping the
+    engine's bitwise contract intact while the model fields are shared
+    (DESIGN.md §17).  Returns (p_k, p_prev_damped_k, traces (S, k, NX)).
+    """
+    ns, nz, nx = p.shape
+    k = src_vals.shape[-1]
+    sv = jnp.asarray(src_vals, p.dtype)
+    if sv.ndim == 1:
+        sv = jnp.broadcast_to(sv, (ns, k))
+    zi = jnp.broadcast_to(jnp.asarray(src_z, jnp.int32), (ns,))
+    xi = jnp.broadcast_to(jnp.asarray(src_x, jnp.int32), (ns,))
+    sidx = jnp.arange(ns)
+    ppad = jnp.pad(p, ((0, 0), (_PAD, _PAD), (_PAD, _PAD)))
+    prevd = p_prev
+    traces = []
+    for j in range(k):
+        cur = ppad[:, _PAD: _PAD + nz, _PAD: _PAD + nx]
+        lap = laplacian_of_padded(ppad, nz, nx)
+        pn = (2.0 * cur - prevd + v2dt2 * lap) * sponge
+        pn = pn.at[sidx, zi, xi].add(sv[:, j])
+        traces.append(
+            jax.lax.dynamic_slice_in_dim(pn, receiver_row, 1, axis=1)[:, 0]
+        )
+        prevd = cur * sponge
+        ppad = jax.lax.dynamic_update_slice(ppad, pn, (0, _PAD, _PAD))
+    return (ppad[:, _PAD: _PAD + nz, _PAD: _PAD + nx], prevd,
+            jnp.stack(traces, axis=1))
+
+
+def wave_block_shots_strips_ref(
+    p: jnp.ndarray,        # (S, NZ, NX) shot batch, current pressure
+    p_prev: jnp.ndarray,   # (S, NZ, NX) previous, already sponge-damped
+    v2dt2: jnp.ndarray,    # (NZ, NX) shared model field
+    sponge: jnp.ndarray,   # (NZ, NX) shared model field
+    src_vals: jnp.ndarray,  # (k,) shared or (S, k) per-shot amplitudes
+    src_z,                 # (S,) int per-shot source rows
+    src_x,                 # (S,) int per-shot source columns
+    *,
+    receiver_row: int = 0,
+    bz: int,
+):
+    """Shot-batched ``wave_block_strips_ref`` — the strip-tiled XLA
+    mirror of the batched STREAMED kernel, BIT-IDENTICAL to both
+    ``wave_block_shots_ref`` and ``vmap``-of-``wave_block_strips_ref``.
+
+    Windows carry a leading shot axis — (n_strips, S, win, NX) — while
+    the model-field windows stay (n_strips, win, NX) and broadcast
+    across shots, mirroring the streamed kernel's single model-field
+    DMA slot.  Per-(strip, shot) source injection scatters one element
+    per pair (order-independent adds), masked to windows that contain
+    the shot's source row, exactly as the single-shot strips mirror
+    masks its in-window injection (DESIGN.md §17)."""
+    ns, nz, nx = p.shape
+    k = src_vals.shape[-1]
+    assert nz % bz == 0, (nz, bz)
+    win = min(bz + 2 * k * _PAD, nz)
+    n = nz // bz
+    starts = [min(max(i * bz - k * _PAD, 0), nz - win) for i in range(n)]
+    offs = [i * bz - starts[i] for i in range(n)]    # strip offset in window
+    stidx = jnp.asarray(starts, jnp.int32)
+    oidx = jnp.asarray(offs, jnp.int32)
+    sv = jnp.asarray(src_vals, p.dtype)
+    if sv.ndim == 1:
+        sv = jnp.broadcast_to(sv, (ns, k))
+    src_zv = jnp.broadcast_to(jnp.asarray(src_z, jnp.int32), (ns,))
+    src_xv = jnp.broadcast_to(jnp.asarray(src_x, jnp.int32), (ns,))
+
+    def windows(a):                   # (S, NZ, NX) -> (n, S, win, NX)
+        return jax.vmap(
+            lambda st: jax.lax.dynamic_slice_in_dim(a, st, win, axis=-2)
+        )(stidx)
+
+    prevd = windows(p_prev)
+    vw = windows(v2dt2)               # (n, win, NX), shared across shots
+    sw = windows(sponge)
+    ppad = jnp.pad(windows(p), ((0, 0), (0, 0), (_PAD, _PAD), (_PAD, _PAD)))
+    ow = receiver_row // bz                          # receiver-owning strip
+    zi = src_zv[None, :] - stidx[:, None]            # (n, S) in-window rows
+    inb = (zi >= 0) & (zi < win)
+    zidx = jnp.clip(zi, 0, win - 1)
+    ii = jnp.broadcast_to(jnp.arange(n)[:, None], (n, ns))
+    ss = jnp.broadcast_to(jnp.arange(ns)[None, :], (n, ns))
+    xx = jnp.broadcast_to(src_xv[None, :], (n, ns))
+    traces = []
+    for j in range(k):
+        cur = ppad[:, :, _PAD: _PAD + win, _PAD: _PAD + nx]
+        lap = laplacian_of_padded(ppad, win, nx)
+        pn = (2.0 * cur - prevd + vw[:, None] * lap) * sw[:, None]
+        # every window containing a shot's source row injects for that
+        # shot; out-of-window pairs add a masked zero on a clipped row
+        amt = jnp.where(inb, sv[None, :, j], jnp.zeros((), pn.dtype))
+        pn = pn.at[ii, ss, zidx, xx].add(amt)
+        traces.append(pn[ow, :, receiver_row - starts[ow], :])
+        prevd = cur * sw[:, None]
+        ppad = jax.lax.dynamic_update_slice(ppad, pn, (0, 0, _PAD, _PAD))
+
+    def owned(w, off):                # (S, win, nx) -> (S, bz, nx)
+        return jax.lax.dynamic_slice_in_dim(w, off, bz, axis=-2)
+
+    p_out = jnp.moveaxis(jax.vmap(owned)(
+        ppad[:, :, _PAD: _PAD + win, _PAD: _PAD + nx], oidx
+    ), 0, 1).reshape(ns, nz, nx)
+    pp_out = jnp.moveaxis(jax.vmap(owned)(prevd, oidx), 0, 1).reshape(
+        ns, nz, nx)
+    return p_out, pp_out, jnp.stack(traces, axis=1)
+
+
 def wave_block_strips_ref(
     p: jnp.ndarray,        # (NZ, NX) current pressure
     p_prev: jnp.ndarray,   # (NZ, NX) previous, already sponge-damped

@@ -792,6 +792,40 @@ def entry_boundary_bytes(text: str, field_shape: tuple[int, ...]) -> dict:
     }
 
 
+def shot_batch_strip_bytes(nz: int, nx: int, s: int, k: int = 1,
+                           dtype_bytes: int = 4) -> dict:
+    """Analytic per-strip-sweep HBM traffic of the shot-batched stencil
+    engine vs the vmapped per-shot path (DESIGN.md §17).
+
+    One k-step sweep over the grid reads the two wavefields and writes
+    both outputs PER SHOT, but the two read-only model fields
+    (``v2dt2``, ``sponge``) are shared: the vmapped per-shot engine
+    re-streams them once per shot (``4·S`` array reads), the batched
+    engine charges them once (``2·S + 2`` reads).  Writes are ``2·S``
+    either way.  Returns the array counts, the byte totals, and
+    ``traffic_ratio`` = vmapped/batched bytes — the model's upper bound
+    on the batched speedup of a purely memory-bound sweep (≈ 4/3 at
+    S=4, → 3/2 as S → ∞)."""
+    field = nz * nx * dtype_bytes
+    vm_reads, bt_reads = 4 * s, 2 * s + 2
+    writes = 2 * s
+    vm = (vm_reads + writes) * field
+    bt = (bt_reads + writes) * field
+    return {
+        "field_bytes": field,
+        "vmapped_read_arrays": vm_reads,
+        "batched_read_arrays": bt_reads,
+        "write_arrays": writes,
+        "vmapped_bytes": vm,
+        "batched_bytes": bt,
+        "traffic_ratio": vm / bt,
+        "launches_vmapped": s,          # grid passes per block
+        "launches_batched": 1,
+        "k": k,
+        "s": s,
+    }
+
+
 def xla_cost_analysis(compiled) -> dict:
     """``compiled.cost_analysis()`` normalized across JAX versions —
     older releases return a one-dict-per-partition list, newer ones a

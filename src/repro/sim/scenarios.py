@@ -48,6 +48,7 @@ from repro.sim.queue import Tenant
 
 __all__ = [
     "SEAM_PROBE",
+    "SHOT_BATCH_PROBE",
     "Scenario",
     "calm",
     "deadline_squeeze",
@@ -61,6 +62,7 @@ __all__ = [
     "poisson_background",
     "poisson_jobs",
     "queued_scenarios",
+    "shot_batch_model_from_probe",
     "spot_market",
     "superlinear_cache",
     "transient_spike",
@@ -113,6 +115,42 @@ def overheads_from_probe(
     ).with_overlapped_seam(
         probe["plan"], probe["ppermute_latency_s"],
         probe["interior_compute_s_per_step"],
+    )
+
+
+#: MEASURED shot-batch scaling probe for the batched stencil engine
+#: (DESIGN.md §17) — a committed snapshot of the streamed shot-batched
+#: kernel's per-timestep wall clock vs batch size S (600×600, k=8,
+#: bz=120, Pallas interpret on CPU, best-of-4; re-run
+#: ``benchmarks/bench_fused_scan.py --shot-batch`` to refresh).
+#: ``t_step_vmapped_s4`` is the PRE-batching engine (one kernel per
+#: shot) at the full batch — the 1.47× the batched engine banks shows
+#: up BETWEEN the engines, while within the batched engine the CPU
+#: interpreter's scaling is near-affine (the model-field-traffic share
+#: the analytic ratio credits is invisible to an emulated memory
+#: hierarchy; on TPU the traffic model bounds it at 4S/(2S+2)).
+SHOT_BATCH_PROBE = {
+    "config": {"nz": 600, "nx": 600, "k": 8, "bz": 120,
+               "engine": "pallas_batched_stream", "backend": "cpu"},
+    "s_values": (1, 2, 4),
+    "t_step_s": (2.333e-3, 4.791e-3, 10.292e-3),
+    "t_step_vmapped_s4": 15.72e-3,
+    "batched_vs_vmapped": 1.475,
+}
+
+
+def shot_batch_model_from_probe(probe: dict | None = None):
+    """Fit the planner's ``ShotBatchModel`` (``t_step(s) = a + b·s``)
+    from a measured shot-batch probe, so BurstPlanner's deadline
+    calculus uses the REAL batched engine's throughput law instead of
+    the naive ``s · t_step(1)`` — see ``core.capacity.ShotBatchModel``.
+    """
+    from repro.core.capacity import ShotBatchModel
+
+    p = probe if probe is not None else SHOT_BATCH_PROBE
+    return ShotBatchModel.fit(
+        p["s_values"], p["t_step_s"],
+        name=p.get("config", {}).get("engine", "shot_batch"),
     )
 
 
