@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 verification + engine/benchmark smokes + docs consistency.
+# Lint + tier-1 verification + engine/benchmark smokes.
 #
 # 1. the repo's tier-1 test command (ROADMAP.md): full pytest, -x -q
 # 2. fused-engine smoke: the k=4 fused block (interpret-mode Pallas AND
@@ -45,8 +45,12 @@
 #    the shot-batch tier point (DESIGN.md §17) with a batched-vs-
 #    vmapped Pallas ratio > 1, in-budget s-aware VMEM bookkeeping, and
 #    the batched traffic model beating the vmapped one.
-# 9. docs consistency: every `DESIGN.md §N` cited under src/ or
-#    examples/ must resolve to a real section heading in DESIGN.md.
+# 9. lint (runs FIRST, before the test tiers): scripts/lint.py --ci —
+#    the repro-lint static-analysis suite (DESIGN.md §18): vmem-budget,
+#    dma-pairing, sim-determinism, tracer-hygiene, design-citations
+#    (the latter subsumes the old docs-consistency grep gate).  The
+#    repo must lint clean, the JSON report must carry all five rules,
+#    and the stage must finish in under 10 s.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -59,6 +63,27 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export JAX_COMPILATION_CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-$PWD/.jax_cache}"
 export JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS=0
 export JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES=-1
+
+echo "== lint =="
+LINT_T0=$SECONDS
+python scripts/lint.py --ci --json /tmp/lint_ci.json
+LINT_ELAPSED=$((SECONDS - LINT_T0))
+python - <<'EOF'
+import json
+
+doc = json.load(open("/tmp/lint_ci.json"))
+assert doc["version"] == 1, doc
+assert doc["count"] == 0 and doc["findings"] == [], doc["findings"]
+assert set(doc["rules"]) == {
+    "vmem-budget", "dma-pairing", "sim-determinism",
+    "tracer-hygiene", "design-citations",
+}, doc["rules"]
+print("lint json schema OK (5 rules, 0 findings)")
+EOF
+if [ "$LINT_ELAPSED" -ge 10 ]; then
+    echo "lint stage took ${LINT_ELAPSED}s (budget: <10s)" >&2
+    exit 1
+fi
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
@@ -336,33 +361,4 @@ for gname, g in pt["grids"].items():
 print(f"trajectory schema OK: big tier grids={sorted(pt['grids'])}")
 EOF
 
-echo "== docs consistency =="
-python - <<'EOF'
-import pathlib
-import re
-import sys
-
-design = pathlib.Path("DESIGN.md").read_text()
-sections = set(re.findall(r"^#+\s+§([\w.-]+)", design, re.M))
-cite_re = re.compile(r"DESIGN\.md\s+((?:§[\w.-]+)(?:,\s*§[\w.-]+)*)")
-dangling = {}
-files = sorted(
-    list(pathlib.Path("src").rglob("*.py"))
-    + list(pathlib.Path("examples").rglob("*.py"))
-)
-n_cites = 0
-for p in files:
-    for m in cite_re.finditer(p.read_text()):
-        for tok in re.findall(r"§([\w.-]+)", m.group(1)):
-            n_cites += 1
-            if tok not in sections:
-                dangling.setdefault(tok, []).append(str(p))
-print(f"DESIGN.md sections: {sorted(sections, key=str)}")
-print(f"citations checked: {n_cites}")
-if dangling:
-    for tok, where in sorted(dangling.items()):
-        print(f"DANGLING: DESIGN.md §{tok} cited in {', '.join(where)}")
-    sys.exit(1)
-print("docs consistency OK")
-EOF
 echo "CI OK"

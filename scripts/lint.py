@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""repro-lint CLI: run the AST static-analysis suite (DESIGN.md §18).
+
+Usage:
+  python scripts/lint.py                     # lint src/ + examples/
+  python scripts/lint.py src/repro/sim       # lint a subtree
+  python scripts/lint.py --rules sim-determinism,dma-pairing
+  python scripts/lint.py --ci --json /tmp/lint.json
+  python scripts/lint.py --list-rules
+
+Exit code 0 when clean, 1 when any finding survives suppressions.
+Suppress a finding inline with ``# lint: disable=<rule> -- why`` on
+(or on the comment line above) the flagged line.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis import (  # noqa: E402
+    ALL_RULES, Analyzer, render_human, to_json,
+)
+
+DEFAULT_PATHS = ("src", "examples")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files or directories to lint "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--json", metavar="PATH", default="",
+                    help="also write machine-readable findings to PATH")
+    ap.add_argument("--ci", action="store_true",
+                    help="CI mode: summary line with timing")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print rule ids and one-line docs, then exit")
+    args = ap.parse_args(argv)
+
+    rules = [cls() for cls in ALL_RULES]
+    if args.list_rules:
+        for r in rules:
+            doc = (type(r).__module__ or "").rsplit(".", 1)[-1]
+            head = (sys.modules[type(r).__module__].__doc__ or doc)
+            head = head.strip().splitlines()[0]
+            print(f"{r.name:<18} {head}")
+        return 0
+    if args.rules:
+        wanted = {s.strip() for s in args.rules.split(",") if s.strip()}
+        known = {r.name for r in rules}
+        unknown = wanted - known
+        if unknown:
+            ap.error(f"unknown rule(s): {sorted(unknown)} "
+                     f"(known: {sorted(known)})")
+        rules = [r for r in rules if r.name in wanted]
+
+    t0 = time.perf_counter()
+    analyzer = Analyzer(rules, ROOT)
+    ctxs = analyzer.load(args.paths)
+    findings = analyzer.run(ctxs)
+    dt = time.perf_counter() - t0
+
+    if args.json:
+        pathlib.Path(args.json).write_text(
+            to_json(findings, rules=[r.name for r in rules]) + "\n"
+        )
+    if findings:
+        print(render_human(findings))
+    if args.ci or not findings:
+        print(f"repro-lint: {len(ctxs)} files, "
+              f"{len(rules)} rules, {len(findings)} finding(s) "
+              f"in {dt:.2f}s")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

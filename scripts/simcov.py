@@ -2,9 +2,9 @@
 """Per-package statement-coverage floors for the repro codebase.
 
 CI gates each package in ``GATES`` on a minimum statement coverage
-from its own test modules: the fleet layer (DESIGN.md §16) at 90%,
-and the shot-batched stencil engine + FWI solver (DESIGN.md §17) at
-85%.  When ``pytest-cov`` is installed this delegates to
+from its own test modules: the fleet layer (DESIGN.md §16) and the
+repro-lint analysis suite (DESIGN.md §18) at 90%, the shot-batched
+stencil engine + FWI solver (DESIGN.md §17) at 85%.  When ``pytest-cov`` is installed this delegates to
 ``pytest --cov=<pkg> --cov-fail-under``; otherwise (the default
 container has no coverage tooling) it falls back to the stdlib
 ``trace`` module: run the gate's test modules under a line tracer,
@@ -39,6 +39,7 @@ GATES = [
      ("tests/test_kernels.py", "tests/test_shot_batch.py",
       "tests/test_streamed_kernel.py", "tests/test_fwi.py",
       "tests/test_fused_engine.py")),
+    ("repro.analysis", 90.0, ("tests/test_lint.py",)),
 ]
 
 

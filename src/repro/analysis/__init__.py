@@ -1,0 +1,71 @@
+"""repro-lint: AST static-analysis suite for the repro codebase.
+
+Framework (``core``): ``Rule`` protocol, per-file and cross-file
+passes, structured ``Finding``s, ``# lint: disable=<rule>``
+suppressions, human/JSON output.  Rules (DESIGN.md §18):
+
+* ``vmem-budget``      — pallas_call scratch/BlockSpec bytes vs the
+                         analytic capacity formulas
+* ``dma-pairing``      — async-copy start/wait pairing + double-buffer
+                         slot alternation
+* ``sim-determinism``  — unordered iteration / entropy sources in
+                         ``repro.sim``
+* ``tracer-hygiene``   — host-sync footguns reachable from traced code
+* ``design-citations`` — docstring section citations resolve against
+                         DESIGN.md's headings
+
+Import-light on purpose: no jax, so ``scripts/lint.py`` starts cold in
+well under the CI stage's 10 s budget.
+"""
+from repro.analysis.core import (
+    Analyzer,
+    FileContext,
+    Finding,
+    PerFileRule,
+    Rule,
+    analyze_source,
+    iter_py_files,
+    render_human,
+    to_json,
+)
+from repro.analysis.design_citations import DesignCitationsRule
+from repro.analysis.dma_pairing import DmaPairingRule
+from repro.analysis.sim_determinism import SimDeterminismRule
+from repro.analysis.symeval import SymEval, SymEvalError
+from repro.analysis.tracer_hygiene import TracerHygieneRule
+from repro.analysis.vmem_budget import VmemBudgetRule
+
+ALL_RULES = (
+    VmemBudgetRule,
+    DmaPairingRule,
+    SimDeterminismRule,
+    TracerHygieneRule,
+    DesignCitationsRule,
+)
+
+
+def default_rules() -> list[Rule]:
+    """One instance of every registered rule."""
+    return [cls() for cls in ALL_RULES]
+
+
+__all__ = [
+    "ALL_RULES",
+    "Analyzer",
+    "DesignCitationsRule",
+    "DmaPairingRule",
+    "FileContext",
+    "Finding",
+    "PerFileRule",
+    "Rule",
+    "SimDeterminismRule",
+    "SymEval",
+    "SymEvalError",
+    "TracerHygieneRule",
+    "VmemBudgetRule",
+    "analyze_source",
+    "default_rules",
+    "iter_py_files",
+    "render_human",
+    "to_json",
+]

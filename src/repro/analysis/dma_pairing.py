@@ -1,0 +1,242 @@
+"""dma-pairing: static race detector for manual async-copy kernels.
+
+The streamed stencil kernels (DESIGN.md §15/§17) drive their own
+double-buffered window DMA: program ``i`` starts strip ``i+1``'s fetch
+into the other slot (guarded by ``pl.when``), then waits on its own
+slot.  The pairing is CROSS-PROGRAM — the ``.start()`` guarded by
+``i + 1 < n`` is consumed by the ``.wait()`` of program ``i + 1`` — so
+a naive "wait on every path" checker would flag the correct idiom.
+This rule understands it instead:
+
+* every async-copy producer (a helper returning ``make_async_copy``
+  handles, or an inline ``make_async_copy``) with ``.start()`` calls
+  in a kernel must also have ``.wait()`` calls, and vice versa — an
+  unpaired start is an in-flight DMA racing the grid, an unpaired wait
+  deadlocks;
+* all waits must be UNGUARDED (a wait inside ``pl.when``/``if`` does
+  not cover every control-flow path the start reaches);
+* slot alternation: for each guarded-or-not start of copy
+  ``(slot_expr, strip_expr)``, the consumer program is
+  ``strip_expr(i)`` and its wait reads ``wait_slot(strip_expr(i))`` —
+  the start's ``slot_expr(i)`` must equal it at every program id where
+  the guard holds (checked numerically over sample ids via symeval).
+
+Evaluation failures on the ALTERNATION check are treated as
+"cannot prove" and skipped (exotic slot math shouldn't false-positive);
+the PAIRING checks are structural and always enforced.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Iterator
+
+from repro.analysis.core import FileContext, Finding, PerFileRule
+from repro.analysis.symeval import SymEval, SymEvalError
+
+RULE = "dma-pairing"
+
+N_PROGRAMS = 6          # sample grid size the alternation is probed on
+
+
+def _attr_name(func: ast.expr) -> str:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+class _Op:
+    __slots__ = ("kind", "key", "slot", "strip", "guard", "line", "col")
+
+    def __init__(self, kind, key, slot, strip, guard, line, col):
+        self.kind, self.key = kind, key
+        self.slot, self.strip, self.guard = slot, strip, guard
+        self.line, self.col = line, col
+
+
+def _is_when_decorated(fdef: ast.FunctionDef) -> ast.expr | None:
+    for dec in fdef.decorator_list:
+        if isinstance(dec, ast.Call) and _attr_name(dec.func) == "when" \
+                and dec.args:
+            return dec.args[0]
+    return None
+
+
+def _loop_ops(node: ast.For, guard) -> list[_Op]:
+    """``for c in producer(slot, strip): c.start()/c.wait()``"""
+    it = node.iter
+    if not (isinstance(it, ast.Call) and isinstance(node.target, ast.Name)):
+        return []
+    key = _attr_name(it.func)
+    if not key:
+        return []
+    slot = it.args[0] if len(it.args) >= 1 else None
+    strip = it.args[1] if len(it.args) >= 2 else None
+    ops = []
+    for st in ast.walk(node):
+        if (isinstance(st, ast.Call)
+                and isinstance(st.func, ast.Attribute)
+                and st.func.attr in ("start", "wait")
+                and isinstance(st.func.value, ast.Name)
+                and st.func.value.id == node.target.id):
+            ops.append(_Op(st.func.attr, key, slot, strip, guard,
+                           st.lineno, st.col_offset))
+    return ops
+
+
+def _inline_op(call: ast.Call, guard,
+               locals_: dict[str, ast.expr]) -> _Op | None:
+    """``make_async_copy(...).start()`` or ``h = make_async_copy(...);
+    h.start()``"""
+    if not (isinstance(call.func, ast.Attribute)
+            and call.func.attr in ("start", "wait")):
+        return None
+    target = call.func.value
+    if isinstance(target, ast.Name) and target.id in locals_:
+        target = locals_[target.id]
+    if isinstance(target, ast.Call) \
+            and _attr_name(target.func) == "make_async_copy":
+        return _Op(call.func.attr, "make_async_copy", None, None, guard,
+                   call.lineno, call.col_offset)
+    return None
+
+
+def _collect(body: list[ast.stmt], guard,
+             locals_: dict[str, ast.expr], ops: list[_Op]) -> None:
+    for st in body:
+        if isinstance(st, ast.FunctionDef):
+            when = _is_when_decorated(st)
+            _collect(st.body, when if when is not None else guard,
+                     locals_, ops)
+        elif isinstance(st, ast.For):
+            loop = _loop_ops(st, guard)
+            if loop:
+                ops.extend(loop)
+            else:
+                _collect(st.body + st.orelse, guard, locals_, ops)
+        elif isinstance(st, ast.If):
+            _collect(st.body, st.test, locals_, ops)
+            if st.orelse:
+                _collect(st.orelse,
+                         ast.UnaryOp(op=ast.Not(), operand=st.test),
+                         locals_, ops)
+        else:
+            for node in ast.walk(st):
+                if isinstance(node, ast.Call):
+                    op = _inline_op(node, guard, locals_)
+                    if op is not None:
+                        ops.append(op)
+
+
+def _local_assigns(fdef: ast.FunctionDef) -> dict[str, ast.expr]:
+    out: dict[str, ast.expr] = {}
+    for st in fdef.body:
+        if (isinstance(st, ast.Assign) and len(st.targets) == 1
+                and isinstance(st.targets[0], ast.Name)):
+            out.setdefault(st.targets[0].id, st.value)
+    return out
+
+
+def _grid_names(fdef: ast.FunctionDef) -> tuple[str, str]:
+    """Names bound to ``pl.program_id(0)`` / ``pl.num_programs(0)``."""
+    pid, n = "i", "n"
+    for name, expr in _local_assigns(fdef).items():
+        if isinstance(expr, ast.Call):
+            callee = _attr_name(expr.func)
+            if callee == "program_id":
+                pid = name
+            elif callee == "num_programs":
+                n = name
+    return pid, n
+
+
+class DmaPairingRule(PerFileRule):
+    name = RULE
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for fdef in [n for n in ctx.tree.body
+                     if isinstance(n, ast.FunctionDef)]:
+            yield from self._check_fn(ctx, fdef)
+
+    def _check_fn(self, ctx: FileContext,
+                  fdef: ast.FunctionDef) -> Iterator[Finding]:
+        locals_ = _local_assigns(fdef)
+        ops: list[_Op] = []
+        _collect(fdef.body, None, locals_, ops)
+        if not ops:
+            return
+        keys = sorted({op.key for op in ops})
+        for key in keys:
+            starts = [o for o in ops if o.key == key and o.kind == "start"]
+            waits = [o for o in ops if o.key == key and o.kind == "wait"]
+            if starts and not waits:
+                o = starts[0]
+                yield Finding(
+                    ctx.rel, o.line, o.col, RULE,
+                    f"async-copy `{key}(...).start()` in `{fdef.name}` "
+                    f"has no matching `.wait()` — in-flight DMA races "
+                    f"the consumer",
+                )
+                continue
+            if waits and not starts:
+                o = waits[0]
+                yield Finding(
+                    ctx.rel, o.line, o.col, RULE,
+                    f"async-copy `{key}(...).wait()` in `{fdef.name}` "
+                    f"has no matching `.start()` — this wait can "
+                    f"deadlock",
+                )
+                continue
+            if not starts:
+                continue
+            unguarded = [w for w in waits if w.guard is None]
+            if not unguarded:
+                o = waits[0]
+                yield Finding(
+                    ctx.rel, o.line, o.col, RULE,
+                    f"every `.wait()` for `{key}` in `{fdef.name}` is "
+                    f"guarded — the wait must run on all control-flow "
+                    f"paths its `.start()` reaches",
+                )
+                continue
+            yield from self._check_slots(ctx, fdef, starts, unguarded)
+
+    def _check_slots(self, ctx: FileContext, fdef: ast.FunctionDef,
+                     starts: list[_Op],
+                     waits: list[_Op]) -> Iterator[Finding]:
+        wait = next((w for w in waits
+                     if w.slot is not None and w.strip is not None), None)
+        if wait is None:
+            return
+        pid_name, n_name = _grid_names(fdef)
+
+        def at(pid: int):
+            return SymEval(ctx.tree,
+                           env={pid_name: pid, n_name: N_PROGRAMS},
+                           scope=fdef)
+
+        for start in starts:
+            if start.slot is None or start.strip is None:
+                continue
+            for pid in range(N_PROGRAMS):
+                try:
+                    ev = at(pid)
+                    if start.guard is not None and \
+                            not ev.eval(start.guard):
+                        continue
+                    strip = ev.eval(start.strip)
+                    got = ev.eval(start.slot)
+                    expected = at(int(strip)).eval(wait.slot)
+                except (SymEvalError, TypeError, ValueError):
+                    break            # cannot prove — don't false-positive
+                if got != expected:
+                    yield Finding(
+                        ctx.rel, start.line, start.col, RULE,
+                        f"double-buffer slot mismatch in `{fdef.name}`: "
+                        f"program {pid} starts strip {int(strip)} into "
+                        f"slot {int(got)} but that strip's `.wait()` "
+                        f"reads slot {int(expected)}",
+                    )
+                    break

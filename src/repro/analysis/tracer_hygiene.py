@@ -1,0 +1,228 @@
+"""tracer-hygiene: host-sync footguns inside traced code.
+
+A ``.item()`` / ``float()`` / ``np.asarray`` / ``print`` on a traced
+value either fails at trace time or — worse, under ``jit`` on
+concrete-shaped debugging paths — silently forces a device→host sync
+in the hot loop.  This rule builds a per-module call graph and flags
+those calls only in functions REACHABLE from traced roots:
+
+* roots: functions decorated with ``jit`` (including
+  ``functools.partial(jax.jit, ...)``), kernel bodies handed to
+  ``pl.pallas_call`` (through ``functools.partial``), ``lax.scan``
+  bodies, and targets of ``vmap``/``pmap``/``shard_map``/``grad``/
+  ``remat``/``jit`` calls (lambda targets contribute the functions
+  they call);
+* reachability: same-module calls by name, transitively, plus every
+  function nested inside a reachable one (nested defs execute inside
+  the trace);
+* exemptions that keep the rule precise on this codebase's idioms:
+  ``float``/``int``/``bool`` of a constant, of anything rooted in
+  ``.shape``/``.ndim``/``.size``/``.dtype``/``len(...)`` (static at
+  trace time), or of names listed in any ``static_argnames`` in the
+  module (static parameters are Python values inside the trace);
+  ``pl.debug_print``/``jax.debug.print`` are not ``print``.
+
+Setup-time builders (memoized factories that CALL jitted functions but
+are never traced themselves) are correctly outside the reachable set —
+their ``np.asarray`` staging is fine and stays unflagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import FileContext, Finding, PerFileRule
+
+RULE = "tracer-hygiene"
+
+TRANSFORMS = {"vmap", "pmap", "shard_map", "grad", "value_and_grad",
+              "remat", "checkpoint", "jit"}
+CASTS = {"float", "int", "bool"}
+STATIC_ATTRS = {"shape", "ndim", "size", "dtype"}
+NUMPY_NAMES = {"np", "numpy"}
+
+
+def _terminal(func: ast.expr) -> str:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def _partial_target(node: ast.expr) -> ast.expr | None:
+    """``functools.partial(f, ...)`` -> ``f`` (else None)."""
+    if isinstance(node, ast.Call) and _terminal(node.func) == "partial" \
+            and node.args:
+        return node.args[0]
+    return None
+
+
+def _is_jit_expr(node: ast.expr) -> bool:
+    if _terminal(node) in ("jit", "pjit"):
+        return True
+    target = _partial_target(node)
+    return target is not None and _terminal(target) in ("jit", "pjit")
+
+
+def _lambda_callees(lam: ast.Lambda) -> Iterator[str]:
+    for node in ast.walk(lam.body):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+            yield node.func.id
+
+
+class _Module:
+    """Per-module function table, roots, static names, reachability."""
+
+    def __init__(self, tree: ast.Module):
+        self.defs: dict[str, ast.FunctionDef] = {}
+        self.nested: dict[ast.FunctionDef, list[ast.FunctionDef]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.FunctionDef):
+                self.defs[node.name] = node
+                self.nested[node] = [
+                    c for c in ast.walk(node)
+                    if isinstance(c, ast.FunctionDef) and c is not node
+                ]
+        self.static = self._static_names(tree)
+        self.roots = self._roots(tree)
+        self.reachable = self._reach()
+
+    def _static_names(self, tree) -> set[str]:
+        names: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.keyword) \
+                    and node.arg == "static_argnames":
+                v = node.value
+                elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) \
+                    else [v]
+                for e in elts:
+                    if isinstance(e, ast.Constant) \
+                            and isinstance(e.value, str):
+                        names.add(e.value)
+        return names
+
+    def _roots(self, tree) -> set[ast.FunctionDef]:
+        roots: set[ast.FunctionDef] = set()
+
+        def add_target(node: ast.expr | None):
+            if node is None:
+                return
+            target = _partial_target(node)
+            if target is not None:
+                node = target
+            if isinstance(node, ast.Name) and node.id in self.defs:
+                roots.add(self.defs[node.id])
+            elif isinstance(node, ast.Lambda):
+                for name in _lambda_callees(node):
+                    if name in self.defs:
+                        roots.add(self.defs[name])
+
+        for node in ast.walk(tree):
+            if isinstance(node, ast.FunctionDef):
+                if any(_is_jit_expr(d) for d in node.decorator_list):
+                    roots.add(node)
+            elif isinstance(node, ast.Call):
+                name = _terminal(node.func)
+                if name == "pallas_call" and node.args:
+                    add_target(node.args[0])
+                elif name == "scan" and node.args:
+                    add_target(node.args[0])
+                elif name in TRANSFORMS and node.args:
+                    add_target(node.args[0])
+        return roots
+
+    def _reach(self) -> set[ast.FunctionDef]:
+        seen: set[ast.FunctionDef] = set()
+        queue = list(self.roots)
+        while queue:
+            fdef = queue.pop()
+            if fdef in seen:
+                continue
+            seen.add(fdef)
+            queue.extend(self.nested.get(fdef, ()))
+            for node in ast.walk(fdef):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Name) \
+                        and node.func.id in self.defs:
+                    queue.append(self.defs[node.func.id])
+        return seen
+
+
+def _own_nodes(fdef: ast.FunctionDef) -> Iterator[ast.AST]:
+    """Walk a def's body without descending into nested defs (those are
+    reachable in their own right and checked separately)."""
+    stack: list[ast.AST] = list(fdef.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                stack.append(child)
+
+
+def _static_cast_arg(arg: ast.expr, static: set[str]) -> bool:
+    """Is this float()/int() argument static at trace time?"""
+    if isinstance(arg, ast.Constant):
+        return True
+    names: list[str] = []
+    for node in ast.walk(arg):
+        if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+            return True
+        if isinstance(node, ast.Call) and _terminal(node.func) == "len":
+            return True
+        if isinstance(node, ast.Name):
+            names.append(node.id)
+    return bool(names) and all(n in static for n in names)
+
+
+class TracerHygieneRule(PerFileRule):
+    name = RULE
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        mod = _Module(ctx.tree)
+        if not mod.reachable:
+            return
+        for fdef in sorted(mod.reachable, key=lambda f: f.lineno):
+            yield from self._check_fn(ctx, mod, fdef)
+
+    def _check_fn(self, ctx: FileContext, mod: _Module,
+                  fdef: ast.FunctionDef) -> Iterator[Finding]:
+        for node in _own_nodes(fdef):
+            if not isinstance(node, ast.Call):
+                continue
+            where = (ctx.rel, node.lineno, node.col_offset, RULE)
+            func = node.func
+            if isinstance(func, ast.Attribute):
+                if func.attr == "item" and not node.args:
+                    yield Finding(*where,
+                                  f"`.item()` in traced `{fdef.name}` "
+                                  f"forces a device→host sync")
+                elif func.attr == "block_until_ready":
+                    yield Finding(*where,
+                                  f"`.block_until_ready()` in traced "
+                                  f"`{fdef.name}` blocks the host")
+                elif func.attr == "device_get":
+                    yield Finding(*where,
+                                  f"`device_get` in traced "
+                                  f"`{fdef.name}` forces a host sync")
+                elif func.attr in ("asarray", "array") \
+                        and isinstance(func.value, ast.Name) \
+                        and func.value.id in NUMPY_NAMES:
+                    yield Finding(*where,
+                                  f"`{func.value.id}.{func.attr}` in "
+                                  f"traced `{fdef.name}` materializes "
+                                  f"on host; use jnp")
+            elif isinstance(func, ast.Name):
+                if func.id in CASTS and node.args and \
+                        not _static_cast_arg(node.args[0], mod.static):
+                    yield Finding(*where,
+                                  f"`{func.id}()` on a traced value in "
+                                  f"`{fdef.name}` forces a host sync "
+                                  f"(static shapes/args are exempt)")
+                elif func.id == "print":
+                    yield Finding(*where,
+                                  f"`print()` in traced `{fdef.name}` "
+                                  f"runs at trace time only; use "
+                                  f"jax.debug.print")

@@ -108,6 +108,8 @@ def flash_attention(
     )
     o_spec = pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0))
 
+    # lint: disable=vmem-budget -- O(bq·D) softmax accumulators, not a
+    # wavefield capacity design; no analytic formula governs this kernel
     return pl.pallas_call(
         functools.partial(
             _flash_kernel, bq=bq, bk=bk, scale=scale, causal=causal

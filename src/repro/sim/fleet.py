@@ -553,8 +553,10 @@ class FleetController:
             # first-fit over the expired set, fair-share order)
             placements = []
             for e in expired:
-                for tgt, f in free.items():
-                    if f >= e.chips:
+                # fixed site-then-cloud order, not free.items(): the
+                # admission order must never depend on dict history
+                for tgt in (SITE, CLOUD):
+                    if tgt in free and free[tgt] >= e.chips:
                         placements.append((e, tgt))
                         free[tgt] -= e.chips
                         break
