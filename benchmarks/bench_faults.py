@@ -1,0 +1,90 @@
+"""Fault-storm robustness grid (DESIGN.md §19).
+
+Runs the ``fault_storm`` scenario — overload plus provisioning
+denials/timeouts, a market-wide reclaim storm, silent checkpoint
+corruption and straggler pods — through the (policy × hardening) grid,
+plus the same world with faults disarmed and the ``preemption_pressure``
+scavenger scenario.  The acceptance rows CI pins:
+
+  faults.hardened_hit_ge_baseline   hardened `plan` hit-rate >= the
+                                    unhardened baseline under the SAME
+                                    fault draws
+  faults.hardened_cost_bounded      hardened cloud $ <= 1.5 x the
+                                    fault-free run's (robustness not
+                                    bought with runaway spend)
+  faults.preempt_admit_latency_ok   the expired weighted job is
+                                    admitted within one evaluation
+                                    interval of patience expiry
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.sim import POLICY_FACTORIES, FleetSim
+from repro.sim.scenarios import fault_storm, preemption_pressure
+
+SEED = 0
+POLICIES = ("plan", "react")
+
+
+def sweep(seed: int = SEED) -> dict[tuple[str, str], object]:
+    out = {}
+    for pol in POLICIES:
+        pf = POLICY_FACTORIES[pol]
+        for hardened in (True, False):
+            sc = fault_storm(seed, hardened=hardened)
+            tag = "hardened" if hardened else "baseline"
+            out[(pol, tag)] = FleetSim(sc, pf, seed=seed).run()
+        clean = dataclasses.replace(
+            fault_storm(seed, hardened=True),
+            faults=None, retry=None, name="clean",
+        )
+        out[(pol, "clean")] = FleetSim(clean, pf, seed=seed).run()
+    return out
+
+
+def run() -> list[str]:
+    t0 = time.perf_counter()
+    recs = sweep()
+    sc = preemption_pressure(SEED)
+    pre = FleetSim(sc, POLICY_FACTORIES["plan"], seed=SEED).run()
+    dt_us = (time.perf_counter() - t0) * 1e6
+    n = len(recs) + 1
+    rows = [f"faults.storm_grid_runs,{dt_us / n:.0f},{n}"]
+    for (pol, tag), r in sorted(recs.items()):
+        retries = sum(j.retries for j in r.jobs)
+        gave_up = sum(j.gave_up for j in r.jobs)
+        rows.append(
+            f"faults.storm.{pol}.{tag},{dt_us / n:.0f},"
+            f"hit={r.hit_rate:.2f};cost={r.cloud_cost:.2f};"
+            f"retries={retries};gave_up={gave_up}"
+        )
+    gold = next(j for j in pre.jobs if j.name == "gold0")
+    scav = next(j for j in pre.jobs if j.name == "scav0")
+    admit_s = next(t for t, k, _ in gold.events if k == "admit")
+    rows.append(
+        f"faults.preemption_pressure.plan,{dt_us / n:.0f},"
+        f"gold_hit={int(gold.met_deadline)};"
+        f"scav_preemptions={scav.preemptions};"
+        f"gold_admit_s={admit_s:.0f}"
+    )
+    # ---- acceptance rows (pinned by ci.sh bench-schema gate) -------
+    h, b = recs[("plan", "hardened")], recs[("plan", "baseline")]
+    clean = recs[("plan", "clean")]
+    rows.append(
+        f"faults.hardened_hit_ge_baseline,{dt_us / n:.0f},"
+        f"{int(h.hit_rate >= b.hit_rate)}"
+    )
+    rows.append(
+        f"faults.hardened_cost_bounded,{dt_us / n:.0f},"
+        f"{int(h.cloud_cost <= 1.5 * clean.cloud_cost)}"
+    )
+    deadline = (
+        gold.events[0][0] + sc.starve_patience_s + sc.eval_interval_s
+    )
+    rows.append(
+        f"faults.preempt_admit_latency_ok,{dt_us / n:.0f},"
+        f"{int(gold.met_deadline and admit_s <= deadline)}"
+    )
+    return rows

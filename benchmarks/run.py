@@ -12,6 +12,9 @@
                           loop; HBM launch-boundary proxy
   bench_fleet_scenarios — autoscaler policy suite × fleet scenarios
                           (hit-rate / cloud cost / useful-work frac)
+  bench_faults          — fault-storm robustness grid: hardened vs
+                          unhardened loop under the same fault draws
+                          (hit-rate / cost bound / preemption latency)
   bench_fleet_tournament— policy × scheduler × scenario tournament of
                           the multi-tenant queue layer (hit-rate /
                           cloud $ / fairness); ``--big`` adds the
@@ -94,6 +97,7 @@ from benchmarks import (  # noqa: E402
     bench_burst_deadline,
     bench_capacity_fit,
     bench_envs,
+    bench_faults,
     bench_fleet_scenarios,
     bench_fleet_tournament,
     bench_fused_scan,
@@ -123,6 +127,7 @@ BENCHES = [
     ("burst_deadline", bench_burst_deadline),
     ("fleet_scenarios", bench_fleet_scenarios),
     ("fleet_tournament", bench_fleet_tournament),
+    ("faults", bench_faults),
     ("real_elastic", bench_real_elastic),
     ("overheads", bench_overheads),
     ("kernels", bench_kernels),

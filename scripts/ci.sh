@@ -25,7 +25,14 @@
 # 5c. coverage floors: per-package statement-coverage gates from each
 #    package's own test modules (pytest-cov when installed, stdlib
 #    `trace` fallback otherwise — scripts/simcov.py): repro.sim >=90%,
-#    repro.kernels.stencil and repro.fwi.solver >=85% (DESIGN.md §17).
+#    repro.sim.faults >=90%, repro.kernels.stencil and repro.fwi.solver
+#    >=85% (DESIGN.md §17).
+# 5d. fault-storm smoke (DESIGN.md §19): the hardened `plan` loop must
+#    keep its hit-rate >= the unhardened baseline under the SAME fault
+#    draws at bounded cost (<=1.5x a fault-free run), the fault run
+#    must be bit-deterministic per seed, and scavenger preemption must
+#    admit the expired weighted job within one evaluation interval —
+#    the acceptance rows also ride the bench-schema gate (faults bench).
 # 6. real-elastic smoke: a small FWI config driven by the `react`
 #    policy through the real orchestrator (2 host devices) must apply
 #    at least one GROW and one RETIRE through real re-striping and keep
@@ -124,15 +131,16 @@ print("fused-engine smoke OK")
 EOF
 
 echo "== bench-schema smoke =="
-python benchmarks/run.py --only envs,capacity_fit,real_elastic \
+python benchmarks/run.py --only envs,capacity_fit,real_elastic,faults \
     --json /tmp/bench_ci.json
 python - <<'EOF'
 import json
 
 doc = json.load(open("/tmp/bench_ci.json"))
 assert doc["failures"] == 0, doc["errors"]
-assert set(doc["benches"]) == {"envs", "capacity_fit", "real_elastic"}, \
-    doc["benches"].keys()
+assert set(doc["benches"]) == {
+    "envs", "capacity_fit", "real_elastic", "faults",
+}, doc["benches"].keys()
 for name, rows in doc["benches"].items():
     assert rows, f"bench {name} produced no rows"
     for rec in rows:
@@ -147,7 +155,14 @@ assert by_name["real_elastic.costaware_cheaper_at_equal_hit"]["derived"] \
 assert by_name["real_elastic.real_costaware_no_worse"]["derived"] == "1"
 assert by_name["real_elastic.sim_vs_real"]["derived"].startswith(
     "hit_match=1")
-print("bench json schema OK (incl. real_elastic sim-vs-real rows)")
+# the §19 robustness acceptance rows: hardened hit-rate >= the
+# unhardened baseline, cost bounded vs a fault-free run, and the
+# preempted admission landing within one evaluation interval
+by_name = {r["name"]: r for r in doc["benches"]["faults"]}
+assert by_name["faults.hardened_hit_ge_baseline"]["derived"] == "1"
+assert by_name["faults.hardened_cost_bounded"]["derived"] == "1"
+assert by_name["faults.preempt_admit_latency_ok"]["derived"] == "1"
+print("bench json schema OK (incl. real_elastic + faults rows)")
 EOF
 
 echo "== benchmark smoke =="
@@ -220,6 +235,42 @@ assert derived("fleet_tournament.aware_beats_fifo_noburst") == "1", \
     "FIFO+no-burst on hit-rate at lower cloud $ than FIFO+always-burst"
 assert derived("fleet_tournament.jobs_conserved") == "1", \
     "every submitted job must end finished/running/queued in every cell"
+EOF
+
+echo "== fault-storm smoke =="
+python - <<'EOF'
+import dataclasses
+import hashlib
+
+from repro.sim import FleetSim, PlanAutoscaler
+from repro.sim.scenarios import fault_storm, preemption_pressure
+
+def digest(rec):
+    return hashlib.sha256(
+        repr(dataclasses.asdict(rec)).encode()
+    ).hexdigest()
+
+h = FleetSim(fault_storm(0, hardened=True), PlanAutoscaler, seed=0).run()
+again = FleetSim(fault_storm(0, hardened=True), PlanAutoscaler,
+                 seed=0).run()
+assert digest(h) == digest(again), "fault run not bit-deterministic"
+b = FleetSim(fault_storm(0, hardened=False), PlanAutoscaler,
+             seed=0).run()
+assert all(j.finished for j in h.jobs), "hardened run must finish"
+assert h.hit_rate >= b.hit_rate, (h.hit_rate, b.hit_rate)
+clean = dataclasses.replace(fault_storm(0, hardened=True),
+                            faults=None, retry=None, name="clean")
+c = FleetSim(clean, PlanAutoscaler, seed=0).run()
+assert h.cloud_cost <= 1.5 * c.cloud_cost, (h.cloud_cost, c.cloud_cost)
+sc = preemption_pressure(0)
+p = FleetSim(sc, PlanAutoscaler, seed=0).run()
+gold = next(j for j in p.jobs if j.name == "gold0")
+admit = next(t for t, k, _ in gold.events if k == "admit")
+limit = 60.0 + sc.starve_patience_s + sc.eval_interval_s
+assert gold.met_deadline and admit <= limit, (admit, limit)
+print(f"fault-storm smoke OK: hardened hit={h.hit_rate:.2f} >= "
+      f"baseline {b.hit_rate:.2f}, cost {h.cloud_cost:.0f} <= "
+      f"1.5x clean {c.cloud_cost:.0f}, preempt admit at {admit:.0f}s")
 EOF
 
 echo "== coverage floors =="

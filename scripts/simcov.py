@@ -2,15 +2,19 @@
 """Per-package statement-coverage floors for the repro codebase.
 
 CI gates each package in ``GATES`` on a minimum statement coverage
-from its own test modules: the fleet layer (DESIGN.md §16) and the
-repro-lint analysis suite (DESIGN.md §18) at 90%, the shot-batched
-stencil engine + FWI solver (DESIGN.md §17) at 85%.  When ``pytest-cov`` is installed this delegates to
+from its own test modules: the fleet layer (DESIGN.md §16), the fault
+layer (DESIGN.md §19) and the repro-lint analysis suite (DESIGN.md
+§18) at 90%, the shot-batched stencil engine + FWI solver (DESIGN.md
+§17) at 85%.  When ``pytest-cov`` is installed this delegates to
 ``pytest --cov=<pkg> --cov-fail-under``; otherwise (the default
 container has no coverage tooling) it falls back to the stdlib
 ``trace`` module: run the gate's test modules under a line tracer,
 intersect the executed lines with each module's executable lines, and
-enforce the same floor.  Traced runs are cached per test set, so gates
-that share tests pay the (10-30x slower under trace) run once.
+enforce the same floor.  Each test set is traced in a FRESH subprocess
+(one gate's imports and jit-compile caches must not leak into the next
+gate's tracer — see ``_traced_lines``), and traced runs are cached per
+test set, so gates that share tests pay the (10-30x slower under
+trace) run once.
 
 Usage:  PYTHONPATH=src python scripts/simcov.py [--only PKG[,PKG...]]
 """
@@ -30,7 +34,12 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 #: lists the smallest set that genuinely exercises its target.
 GATES = [
     ("repro.sim", 90.0,
-     ("tests/test_fleet.py", "tests/test_fleet_properties.py")),
+     ("tests/test_fleet.py", "tests/test_fleet_properties.py",
+      "tests/test_faults.py")),
+    # identical test tuple -> shares the repro.sim traced run
+    ("repro.sim.faults", 90.0,
+     ("tests/test_fleet.py", "tests/test_fleet_properties.py",
+      "tests/test_faults.py")),
     ("repro.kernels.stencil", 85.0,
      ("tests/test_kernels.py", "tests/test_shot_batch.py",
       "tests/test_streamed_kernel.py", "tests/test_fwi.py",
@@ -79,13 +88,53 @@ def _run_with_pytest_cov(gates) -> int:
 
 def _traced_lines(tests: tuple[str, ...],
                   _cache: dict = {}) -> dict[str, set[int]]:
-    """Executed lines per absolute filename for one traced test run."""
+    """Executed lines per absolute filename for one traced test run.
+
+    The run happens in a FRESH subprocess (``--trace-json`` child
+    mode).  Tracing in-process would let one gate's run poison the
+    next: modules already in ``sys.modules`` never re-execute their
+    top level under the later tracer, and jax functions compiled by an
+    earlier gate's tests are cache hits whose tracing the tracer never
+    sees — e.g. a jax-importing test in the ``repro.sim`` gate would
+    silently deflate the stencil/solver gates by ~15-25 points.
+    """
     if tests in _cache:
         return _cache[tests]
+    import json
+    import tempfile
+
+    fd, out = tempfile.mkstemp(suffix=".json", prefix="simcov-")
+    os.close(fd)
+    try:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(ROOT / "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+        )
+        rc = subprocess.call(
+            [sys.executable, os.path.abspath(__file__),
+             "--trace-json", out, *tests],
+            cwd=ROOT, env=env,
+        )
+        if rc != 0:
+            raise SystemExit(f"simcov: test run failed (exit {rc}): {tests}")
+        with open(out) as fh:
+            raw = json.load(fh)
+    finally:
+        os.unlink(out)
+    executed = {fn: set(lines) for fn, lines in raw.items()}
+    _cache[tests] = executed
+    return executed
+
+
+def _trace_json(out: str, tests: list[str]) -> int:
+    """Child mode: run ``tests`` under a line tracer, dump hit lines."""
+    import json
     import trace
 
     import pytest
 
+    os.chdir(ROOT)
+    sys.path.insert(0, str(ROOT / "src"))
     # NB: no ignoredirs — trace._Ignore caches decisions by bare module
     # name, so ignoring stdlib ``queue.py``/``__init__.py`` would also
     # silently ignore repro/sim/queue.py and repro/sim/__init__.py
@@ -93,21 +142,20 @@ def _traced_lines(tests: tuple[str, ...],
     rc = tracer.runfunc(
         pytest.main, ["-q", "-p", "no:cacheprovider", *tests]
     )
-    if rc not in (0,):
-        raise SystemExit(f"simcov: test run failed (exit {rc}): {tests}")
-    executed: dict[str, set[int]] = {}
+    if rc != 0:
+        return int(rc)
+    executed: dict[str, list[int]] = {}
     for (fn, lineno), cnt in tracer.results().counts.items():
         if cnt > 0:
-            executed.setdefault(os.path.abspath(fn), set()).add(lineno)
-    _cache[tests] = executed
-    return executed
+            executed.setdefault(os.path.abspath(fn), []).append(lineno)
+    with open(out, "w") as fh:
+        json.dump(executed, fh)
+    return 0
 
 
 def _run_with_trace(gates) -> int:
     import trace
 
-    os.chdir(ROOT)
-    sys.path.insert(0, str(ROOT / "src"))
     failed = []
     for dotted, floor, tests in gates:
         executed = _traced_lines(tests)
@@ -137,6 +185,9 @@ def _run_with_trace(gates) -> int:
 
 
 def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if argv[:1] == ["--trace-json"]:  # internal child mode
+        return _trace_json(argv[1], argv[2:])
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default="",
                     help="comma-separated dotted targets to gate")

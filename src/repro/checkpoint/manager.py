@@ -7,13 +7,28 @@ NamedSharding performs the redistribution, which IS the burst's state
 movement on real hardware.
 
 Layout: <dir>/step_<n>/
-          manifest.json        {step, leaf paths, shapes, dtypes, extra}
+          manifest.json        {step, leaf paths, shapes, dtypes, crcs,
+                                extra}
           <leaf_key>.npy       one array per pytree leaf
-Writes go to step_<n>.tmp and are atomically renamed; a torn write is
-never visible.  Async mode pushes the host-side serialization to a
+Writes go to step_<n>.tmp and are atomically swapped in (the previous
+generation is renamed aside to step_<n>.old for the instant of the
+swap); a torn write is never visible, and a crash mid-save can never
+leave a truncated latest checkpoint shadowing a good older one
+(DESIGN.md §19).  Async mode pushes the host-side serialization to a
 daemon thread (off the training critical path); save(wait=True) or
-close() joins it.  A SIGTERM handler can be installed for preemption-
-triggered snapshots (install_preemption_hook).
+close() joins it.
+
+Integrity (DESIGN.md §19): every leaf is stamped with a CRC-32 of its
+serialized bytes at save time.  ``restore()`` verifies before trusting:
+a generation whose bytes do not match its manifest is treated as
+corrupt, and the default restore falls back to the newest *intact*
+generation (``keep`` is floored to 2 so a fallback always has a
+candidate).  When no generation verifies, ``NoIntactCheckpointError``
+names every step tried.
+
+A SIGTERM handler can be installed for preemption-triggered snapshots
+(install_preemption_hook): save, then exit cleanly so the restart path
+resumes bit-consistently from the snapshot.
 """
 from __future__ import annotations
 
@@ -23,6 +38,8 @@ import queue
 import shutil
 import signal
 import threading
+import warnings
+import zlib
 from pathlib import Path
 from typing import Any, Callable
 
@@ -30,6 +47,12 @@ import jax
 import numpy as np
 
 _SEP = "__"
+
+
+class NoIntactCheckpointError(RuntimeError):
+    """Every on-disk checkpoint generation failed integrity
+    verification (or none exists) — there is nothing safe to restore
+    (DESIGN.md §19)."""
 
 
 def _flatten(tree) -> dict[str, Any]:
@@ -54,7 +77,9 @@ class CheckpointManager:
                  keep: int = 3):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
-        self.keep = keep
+        # at least 2 generations: a corrupt latest must always leave an
+        # older candidate for the integrity fallback (DESIGN.md §19)
+        self.keep = max(keep, 2)
         self.async_save = async_save
         self._q: queue.Queue = queue.Queue()
         self._worker: threading.Thread | None = None
@@ -126,11 +151,24 @@ class CheckpointManager:
                 "file": fname,
                 "shape": list(arr.shape),
                 "dtype": true_dtype,
+                # content checksum of the serialized bytes — what
+                # restore() verifies before trusting this generation
+                "crc32": zlib.crc32((tmp / fname).read_bytes()),
             }
         (tmp / "manifest.json").write_text(json.dumps(manifest))
+        # atomic swap: never rmtree the live generation before the new
+        # one is in place — a crash between those two operations would
+        # otherwise lose BOTH (DESIGN.md §19).  Rename the old aside,
+        # move the new in (os.replace is atomic on one filesystem),
+        # then drop the old.
+        old = self.dir / f"step_{step:08d}.old"
+        if old.exists():
+            shutil.rmtree(old)
         if final.exists():
-            shutil.rmtree(final)
+            os.replace(final, old)
         os.replace(tmp, final)
+        if old.exists():
+            shutil.rmtree(old)
         self._gc()
 
     def _gc(self):
@@ -143,7 +181,8 @@ class CheckpointManager:
     def all_steps(self) -> list[int]:
         out = []
         for p in self.dir.glob("step_*"):
-            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+            if p.suffix in (".tmp", ".old") \
+                    or not (p / "manifest.json").exists():
                 continue
             out.append(int(p.name.split("_")[1]))
         return sorted(out)
@@ -152,16 +191,63 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def verify(self, step: int) -> bool:
+        """True iff the generation at ``step`` passes integrity
+        verification: readable manifest and every leaf's bytes matching
+        its stamped CRC-32 (DESIGN.md §19).  Legacy manifests without
+        checksums are trusted (there is nothing to verify against)."""
+        d = self.dir / f"step_{step:08d}"
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+            for meta in manifest["leaves"].values():
+                crc = meta.get("crc32")
+                if crc is None:
+                    continue
+                if zlib.crc32((d / meta["file"]).read_bytes()) != crc:
+                    return False
+        except (OSError, ValueError, KeyError):
+            return False
+        return True
+
     def restore(self, target_state, step: int | None = None,
                 shardings=None) -> tuple[Any, dict]:
         """Load into the structure of `target_state` (pytree of arrays or
         ShapeDtypeStructs).  `shardings` (matching pytree) redistributes
         each leaf onto the *current* mesh — restoring under a different
         mesh than the save is the supported path (that is the burst).
+
+        With ``step=None`` (the default), generations are verified
+        newest-first and the newest *intact* one is restored — a
+        corrupt latest falls back with a warning instead of silently
+        resuming from garbage (DESIGN.md §19).  An explicit ``step``
+        that fails verification raises instead: the caller asked for
+        that generation specifically.
         """
-        step = step if step is not None else self.latest_step()
         if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+            steps = self.all_steps()
+            if not steps:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+            step = None
+            for s in reversed(steps):
+                if self.verify(s):
+                    step = s
+                    break
+                warnings.warn(
+                    f"checkpoint step {s} failed integrity verification;"
+                    f" falling back to an older generation",
+                    stacklevel=2,
+                )
+            if step is None:
+                raise NoIntactCheckpointError(
+                    f"no intact checkpoint in {self.dir}: every "
+                    f"generation failed integrity verification "
+                    f"(steps tried: {steps})"
+                )
+        elif not self.verify(step):
+            raise NoIntactCheckpointError(
+                f"checkpoint step {step} in {self.dir} failed "
+                f"integrity verification"
+            )
         d = self.dir / f"step_{step:08d}"
         manifest = json.loads((d / "manifest.json").read_text())
         flat_target = _flatten(target_state)
@@ -198,13 +284,26 @@ class CheckpointManager:
         )
 
 
-def install_preemption_hook(save_fn: Callable[[], None]):
-    """SIGTERM -> best-effort snapshot before the platform reclaims us."""
+def install_preemption_hook(save_fn: Callable[[], None], *,
+                            exit_code: int | None = 143):
+    """SIGTERM -> snapshot -> clean exit (DESIGN.md §19).
+
+    The platform is reclaiming us: ``save_fn`` persists the snapshot,
+    then the process exits with ``exit_code`` (default 143 = 128 +
+    SIGTERM, the conventional "terminated" status) so the supervisor's
+    restart path restores from it and resumes bit-consistently.  Pass
+    ``exit_code=None`` to chain to Python's default KeyboardInterrupt
+    behavior instead of exiting.  Returns the previous SIGTERM handler
+    so callers (and tests) can restore it.
+    """
 
     def handler(signum, frame):
         try:
             save_fn()
         finally:
-            signal.default_int_handler(signum, frame)
+            if exit_code is None:
+                signal.default_int_handler(signum, frame)
+            else:
+                raise SystemExit(exit_code)
 
-    signal.signal(signal.SIGTERM, handler)
+    return signal.signal(signal.SIGTERM, handler)

@@ -41,8 +41,11 @@ Session (FWISession) —
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Callable, Protocol, Sequence
+
+import numpy as np
 
 from repro.core.allocator import (
     HeterogeneousPlan,
@@ -116,6 +119,10 @@ class ScaleContext:
     monitor: StepTimeMonitor
     legal: list[int]
     contention: float = 1.0          # site demand / capacity (>= 1)
+    # ---- provider-health telemetry (DESIGN.md §19): lets a policy
+    # hold off re-requesting from a provider that keeps denying it
+    provision_failures: int = 0      # consecutive denials, 0 on success
+    since_failure_s: float = math.inf  # time since the last denial
 
 
 class AutoscalerPolicy(Protocol):
@@ -157,6 +164,8 @@ class RunRecord:
     final_resources: Resources | None = None
     cloud_chip_s: float = 0.0            # elastic chip-seconds held
     cloud_cost_usd: float = 0.0          # priced via planner ($/chip-h)
+    retries: int = 0                     # provisioning denials (§19)
+    gave_up: bool = False                # a grow was abandoned (§19)
 
 
 SessionFactory = Callable[[Resources, int, Any], Session]
@@ -175,6 +184,7 @@ class ElasticOrchestrator:
         rebalance_straggler_rate: float = 0.2,
         eval_interval_s: float | None = None,
         cloud_slowdown: float | None = None,
+        degraded_factor: float | None = None,
     ):
         self.planner = planner
         self.predictor = predictor
@@ -195,6 +205,11 @@ class ElasticOrchestrator:
         #: policy believed when sizing (the sim-vs-real boundary the
         #: fleet's provision handler enforces, DESIGN.md §10)
         self.cloud_slowdown = cloud_slowdown
+        #: degraded-pod detector (DESIGN.md §19): while elastic chips
+        #: are held, a measured step time exceeding ``degraded_factor``
+        #: × the planner's modeled step time forces a RETIRE so the
+        #: loop re-stripes around the sick pod.  None disables it.
+        self.degraded_factor = degraded_factor
 
     # ---- the γ-split applied to resources --------------------------------
 
@@ -268,7 +283,21 @@ class ElasticOrchestrator:
         overhead_s_fn: Callable[[BurstDecision], float] | None = None,
         autoscaler: AutoscalerPolicy | None = None,
         deadline_changes: Sequence[tuple[float, float]] = (),
+        fault_hook: Callable[[str, dict], bool] | None = None,
+        retry_policy=None,
+        rng: np.random.Generator | None = None,
     ) -> RunRecord:
+        """Drive the session to ``steps_total`` (see class docstring).
+
+        Failure hardening (DESIGN.md §19): ``fault_hook(kind, detail)``
+        is consulted before each provisioning attempt — returning True
+        denies it (the injection point for tests and chaos drills).
+        Denials retry under ``retry_policy`` (any object with
+        ``max_retries`` and ``backoff_s(attempt, rng)``, e.g.
+        repro.sim.faults.RetryPolicy) with the backoff drawn from the
+        seeded ``rng``; exhaustion surfaces as ``gave_up`` on the
+        record and the loop carries on without the grow.
+        """
         res = initial
         session = session_factory(res, 0, None)
         elapsed = 0.0
@@ -276,6 +305,12 @@ class ElasticOrchestrator:
         events: list[OrchestratorEvent] = []
         step_times: list[float] = []
         bursts_done = 0
+        retries = 0
+        gave_up = False
+        provision_failures = 0
+        last_failure_elapsed = -math.inf
+        if rng is None:
+            rng = np.random.default_rng(0)
         last_ckpt: Any = None
         last_ckpt_step = -1
         step = 0
@@ -348,13 +383,46 @@ class ElasticOrchestrator:
                 # policy-driven mode: the interval-evaluated autoscaler
                 # replaces the built-in burst-once decision, and every
                 # resize rides the same ckpt -> remesh -> reshard path
-                action = autoscaler.decide(ScaleContext(
-                    step=step, steps_total=steps_total, elapsed_s=elapsed,
-                    est=est, resources=res,
-                    cloud_chips=elastic_chips(res),
-                    planner=self.planner, monitor=self.monitor,
-                    legal=list(self.planner.legal),
-                ))
+                forced: ScaleAction | None = None
+                if (
+                    self.degraded_factor is not None
+                    and elastic_chips(res) > 0
+                ):
+                    # degraded-pod detector (DESIGN.md §19): the cluster
+                    # model says what this allocation *should* deliver;
+                    # measuring far above it means a pod is sick —
+                    # retire the elastic pod and re-stripe around it
+                    t_meas = self.monitor.step_time()
+                    t_model = (
+                        self.planner.cluster_model.predict_time(eff_chips)
+                        + self.planner.overheads.seam_s_per_step()
+                    )
+                    if t_model > 0 \
+                            and t_meas > self.degraded_factor * t_model:
+                        forced = ScaleAction(
+                            "retire",
+                            reason=(
+                                f"degraded pod: measured {t_meas:.3f}s "
+                                f"vs modeled {t_model:.3f}s"
+                            ),
+                        )
+                        events.append(OrchestratorEvent(
+                            step, "degraded",
+                            {"measured_s": t_meas, "modeled_s": t_model},
+                        ))
+                if forced is not None:
+                    action = forced
+                else:
+                    action = autoscaler.decide(ScaleContext(
+                        step=step, steps_total=steps_total,
+                        elapsed_s=elapsed,
+                        est=est, resources=res,
+                        cloud_chips=elastic_chips(res),
+                        planner=self.planner, monitor=self.monitor,
+                        legal=list(self.planner.legal),
+                        provision_failures=provision_failures,
+                        since_failure_s=elapsed - last_failure_elapsed,
+                    ))
                 if (
                     action.kind == "grow"
                     and self.cloud_slowdown is not None
@@ -364,6 +432,39 @@ class ElasticOrchestrator:
                     action = dataclasses.replace(
                         action, slowdown=self.cloud_slowdown
                     )
+                if action.kind == "grow" and fault_hook is not None:
+                    attempt = 1
+                    while fault_hook("provision", {
+                        "chips": action.chips, "attempt": attempt,
+                        "step": step,
+                    }):
+                        retries += 1
+                        provision_failures += 1
+                        last_failure_elapsed = elapsed
+                        events.append(OrchestratorEvent(
+                            step, "provision_denied",
+                            {"chips": action.chips, "attempt": attempt},
+                        ))
+                        if (retry_policy is None
+                                or attempt > retry_policy.max_retries):
+                            gave_up = True
+                            events.append(OrchestratorEvent(
+                                step, "provision_gave_up",
+                                {"chips": action.chips,
+                                 "attempts": attempt},
+                            ))
+                            action = HOLD
+                            break
+                        backoff = retry_policy.backoff_s(attempt, rng)
+                        elapsed += backoff
+                        events.append(OrchestratorEvent(
+                            step, "provision_retry",
+                            {"attempt": attempt + 1,
+                             "backoff_s": backoff},
+                        ))
+                        attempt += 1
+                    else:
+                        provision_failures = 0
                 new_res = self.apply_scale(res, action)
                 if action.kind != "hold" and new_res.pods != res.pods:
                     last_ckpt = session.checkpoint(step)
@@ -455,4 +556,6 @@ class ElasticOrchestrator:
             final_resources=res,
             cloud_chip_s=cloud_chip_s,
             cloud_cost_usd=self.planner.cost_usd(cloud_chip_s),
+            retries=retries,
+            gave_up=gave_up,
         )

@@ -22,12 +22,17 @@ already compiled for an equal mesh.
 from __future__ import annotations
 
 import dataclasses
+import signal
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    install_preemption_hook,
+)
 from repro.core.orchestrator import Resources, Session, elastic_chips
 from repro.fwi.domain import (
     effective_block,
@@ -196,6 +201,94 @@ class FWISession(Session):
             "res_sig": self._res_sig,
             "amortized_eff": self._eff,
         }
+
+
+def save_session_snapshot(manager: CheckpointManager, steps_done: int,
+                          snap: dict) -> None:
+    """Persist an FWISession.checkpoint() dict through the
+    CheckpointManager (DESIGN.md §19): wavefields go as array leaves
+    (checksummed per leaf), scalars and the resource signature ride in
+    the manifest's ``extra``.  Blocks until the write is durable — a
+    preemption snapshot that is still in a queue when the process dies
+    never happened."""
+    arrays = {"p": snap["p"], "p_prev": snap["p_prev"]}
+    n, pods = snap["res_sig"]
+    extra = {
+        "t": int(snap["t"]),
+        "pending": int(snap["pending"]),
+        "amortized_s": float(snap["amortized_s"]),
+        "amortized_eff": float(snap["amortized_eff"]),
+        "res_sig": [n, [list(x) for x in pods]],
+        "steps_done": int(steps_done),
+    }
+    manager.save(steps_done, arrays, extra=extra, wait=True)
+
+
+def load_session_snapshot(manager: CheckpointManager,
+                          step: int | None = None) -> tuple[dict, int]:
+    """Inverse of save_session_snapshot: returns ``(restored,
+    steps_done)`` where ``restored`` feeds FWISession(...) directly.
+    JSON round-trips the resource signature as nested lists; it is
+    rebuilt as nested *tuples* here because FWISession compares it with
+    ``!=`` against a tuple-of-tuples signature (DESIGN.md §19)."""
+    state, extra = manager.restore({"p": 0, "p_prev": 0}, step=step)
+    n, pods = extra["res_sig"]
+    restored = {
+        "p": np.asarray(state["p"]),
+        "p_prev": np.asarray(state["p_prev"]),
+        "t": int(extra["t"]),
+        "pending": int(extra["pending"]),
+        "amortized_s": float(extra["amortized_s"]),
+        "amortized_eff": float(extra["amortized_eff"]),
+        "res_sig": (n, tuple(tuple(x) for x in pods)),
+    }
+    return restored, int(extra["steps_done"])
+
+
+class PreemptionGuard:
+    """SIGTERM → durable snapshot → clean exit, torn-state-free
+    (DESIGN.md §19).
+
+    Python signal handlers run *between bytecodes*, so a handler that
+    called ``session.checkpoint()`` directly could observe a session
+    mid-update (``_advance_block`` assigns ``p``/``p_prev`` and ``t``
+    in separate stores).  The guard instead has the driver loop
+    ``publish()`` a coherent snapshot at each step boundary — one
+    STORE_SUBSCR into a single slot, atomic with respect to signal
+    delivery — and the SIGTERM handler persists whatever snapshot was
+    last published.  The restart path resumes from it bit-consistently
+    via load_session_snapshot.
+    """
+
+    def __init__(self, manager: CheckpointManager, *,
+                 exit_code: int = 143):
+        self.manager = manager
+        self.exit_code = exit_code
+        self._slot: list = [None]    # (steps_done, checkpoint dict)
+        self._prev_handler = None
+
+    def publish(self, session: Session, steps_done: int) -> None:
+        """Record the step-boundary snapshot the handler may persist.
+        Call from the driver loop after each completed step."""
+        self._slot[0] = (steps_done, session.checkpoint(steps_done))
+
+    def install(self) -> "PreemptionGuard":
+        self._prev_handler = install_preemption_hook(
+            self._save, exit_code=self.exit_code
+        )
+        return self
+
+    def uninstall(self) -> None:
+        if self._prev_handler is not None:
+            signal.signal(signal.SIGTERM, self._prev_handler)
+            self._prev_handler = None
+
+    def _save(self) -> None:
+        snap = self._slot[0]
+        if snap is None:
+            return
+        steps_done, state = snap
+        save_session_snapshot(self.manager, steps_done, state)
 
 
 def elastic_stripes_for(base_stripes: int = 1, grown_stripes: int = 2):

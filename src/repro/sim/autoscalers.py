@@ -55,6 +55,7 @@ from repro.core.orchestrator import (
 __all__ = [
     "AutoscalerPolicy",
     "AlwaysBurstAutoscaler",
+    "provider_backoff_active",
     "AdaptFleetAutoscaler",
     "ConpaasFleetAutoscaler",
     "FLEET_POLICY_FACTORIES",
@@ -68,6 +69,21 @@ __all__ = [
     "TokenFleetAutoscaler",
     "POLICY_FACTORIES",
 ]
+
+
+def provider_backoff_active(ctx: ScaleContext, base_s: float = 60.0,
+                            cap_s: float = 960.0) -> bool:
+    """Capped exponential provider cooldown (DESIGN.md §19).
+
+    After ``ctx.provision_failures`` consecutive denials, hold off
+    re-requesting for ``min(base_s * 2**(failures-1), cap_s)`` seconds
+    since the last denial — hammering a provider that keeps saying no
+    just burns evaluation intervals.  Every grow-capable policy gates
+    its grow on this, so the whole suite inherits the cooldown."""
+    if ctx.provision_failures <= 0:
+        return False
+    cooldown = min(base_s * 2.0 ** (ctx.provision_failures - 1), cap_s)
+    return ctx.since_failure_s < cooldown
 
 
 class NoBurstAutoscaler:
@@ -95,6 +111,8 @@ class AlwaysBurstAutoscaler:
     def decide(self, ctx: ScaleContext) -> ScaleAction:
         target = self.chips or max(ctx.legal)
         if ctx.cloud_chips < target:
+            if provider_backoff_active(ctx):
+                return HOLD
             return ScaleAction("grow", chips=target,
                                slowdown=self.slowdown,
                                reason="always-burst holds max slice")
@@ -122,6 +140,8 @@ class ReactAutoscaler:
         if not est.predictable:
             return HOLD
         if est.will_miss:
+            if provider_backoff_active(ctx):
+                return HOLD
             up = legal_step_up(ctx.cloud_chips, ctx.legal)
             if up > ctx.cloud_chips:
                 return ScaleAction("grow", chips=up,
@@ -192,6 +212,8 @@ class HistAutoscaler:
                 ctx.cloud_chips + extra, ctx.legal
             )
             if target > ctx.cloud_chips:
+                if provider_backoff_active(ctx):
+                    return HOLD
                 return ScaleAction(
                     "grow", chips=target, slowdown=self.slowdown,
                     reason=f"p{int(self.grow_pct * 100)} projects miss",
@@ -243,6 +265,8 @@ class PlanAutoscaler:
             effective_chips=eff_now,
         )
         if decision.burst and decision.chips_burst > ctx.cloud_chips:
+            if provider_backoff_active(ctx):
+                return HOLD
             reason = decision.reason
             if decision.est_cost_usd > 0 and "$" not in reason:
                 # cost-aware planner (DESIGN.md §14): surface the

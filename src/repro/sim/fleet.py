@@ -38,6 +38,21 @@ pay checkpoint + restart.  Reclaims and failures roll the job back to
 its last checkpoint.  All randomness flows from per-job seeded
 Generators, so runs are bit-deterministic for a given (scenario,
 scheduler, policy, seed) tuple.
+
+Fault layer (DESIGN.md §19): a scenario may carry a ``FaultPlan`` —
+provisioning denials/timeouts (retried under the scenario's
+``RetryPolicy`` with capped exponential backoff, surfacing ``retries``
+/ ``gave_up``), correlated reclaim storms, silently-corrupt checkpoint
+writes (rollback falls back to the newest *intact* generation when
+``ckpt_integrity`` is on; an unhardened run trusts the latest blindly
+and collapses to step 0), and straggler pods attaching with a degraded
+K.  On top of the fault layer the admission pass gains scavenger
+*preemption* (checkpoint a running zero-weight job through the
+ckpt→restart path to admit an expired weighted entry) and admission-
+time deadline *renegotiation* (counter-offer or reject an infeasible
+deadline using the same calibrated capacity model the planner sizes
+with).  All fault draws come from dedicated per-job seeded streams, so
+fault runs stay bit-deterministic per (scenario, policy, seed).
 """
 from __future__ import annotations
 
@@ -73,6 +88,7 @@ from repro.sim.autoscalers import (
     FleetAutoscaler,
     FleetContext,
 )
+from repro.sim.faults import FaultInjector, RetryPolicy
 from repro.sim.queue import CentralQueue, QueueEntry, Tenant, tenants_for
 from repro.sim.schedulers import CLOUD, SCHEDULER_FACTORIES, SITE, Scheduler
 
@@ -183,9 +199,14 @@ class JobRecord:
     rollbacks: int
     events: list[tuple[float, str, dict]]
     tenant: str = "user0"
-    #: finished | running | queued | pending (pre-arrival)
+    #: finished | running | queued | pending (pre-arrival) | rejected
     state: str = "finished"
     wait_s: float = 0.0               # queue wait before placement
+    # ---- fault layer (DESIGN.md §19) ----
+    retries: int = 0                  # provisioning attempts denied
+    gave_up: bool = False             # a grow request was abandoned
+    preemptions: int = 0              # times checkpointed off the site
+    renegotiated: bool = False        # deadline counter-offered at admit
 
 
 @dataclasses.dataclass
@@ -231,6 +252,19 @@ class JobController:
         self.steps_done = 0
         self.last_ckpt = None
         self.last_ckpt_step = 0
+        #: checkpoint generations, oldest first: (step, state, intact);
+        #: the initial state is an implicit intact generation (§19)
+        self.ckpt_gens: list[tuple[int, object, bool]] = [(0, None, True)]
+        self.faults: FaultInjector | None = None
+        self.retries = 0              # provisioning attempts denied
+        self.gave_up = False
+        self.provision_failures = 0   # consecutive, reset on success
+        self.last_failure_s = -math.inf
+        self.preemptions = 0
+        self.site_banked_chip_s = 0.0  # site chip·s served pre-preemption
+        self.rejected = False
+        self.renegotiated = False
+        self.ever_placed = False
         self.arrived = False
         self.queued = False
         self.finished = False
@@ -278,6 +312,8 @@ class JobController:
 
     @property
     def state(self) -> str:
+        if self.rejected:
+            return "rejected"
         if self.finished:
             return "finished"
         if self.arrived:
@@ -354,6 +390,27 @@ class FleetController:
         self.starve_patience_s: float = getattr(
             scenario, "starve_patience_s", 900.0
         )
+        # ---- fault layer + robustness knobs (DESIGN.md §19) --------------
+        self.faults = getattr(scenario, "faults", None)
+        self.retry: RetryPolicy | None = getattr(scenario, "retry", None)
+        self.ckpt_integrity: bool = getattr(
+            scenario, "ckpt_integrity", True
+        )
+        self.ckpt_keep: int = max(getattr(scenario, "ckpt_keep", 3), 2)
+        self.preemption: bool = getattr(scenario, "preemption", False)
+        self.admission: str = getattr(scenario, "admission", "accept")
+        self.admission_margin: float = getattr(
+            scenario, "admission_margin", 0.1
+        )
+        if self.faults is not None:
+            for i, j in enumerate(self.jobs):
+                j.faults = FaultInjector(self.faults, seed, i)
+        #: fleet-level stream for the pool's storm draw (per-job storm
+        #: hits come from each job's own injector stream)
+        self._storm_rng = (
+            np.random.default_rng([seed, 911])
+            if self.faults is not None else None
+        )
         # the shared pre-provisioned pool the fleet policy sizes
         self.pool_free = 0
         self.pool_pending = 0
@@ -405,8 +462,63 @@ class FleetController:
             extra_slowdown=contention_slowdown,
         )
 
+    def _make_planner(self, spec: JobSpec) -> BurstPlanner:
+        """Per-job capacity models from the workload's own scaling law
+        (t = W/c**α), cloud curve K× above — the paper's pre-processing
+        fit, done analytically since the simulated law is known."""
+        cs = sorted(set(self.cloud.legal_slices) | {spec.onprem_chips})
+        w = spec.chip_seconds_per_step
+        a = spec.scaling_alpha
+        return BurstPlanner(
+            cluster_model=LogCapacityModel.fit(
+                cs, [w / c ** a for c in cs], name="site"),
+            cloud_model=LogCapacityModel.fit(
+                cs, [self.cloud.slowdown * w / c ** a for c in cs],
+                name="cloud"),
+            chips_cluster=spec.onprem_chips,
+            legal_slices=self.cloud.legal_slices,
+            overheads=self.sc.overheads,
+            price_per_chip_hour=self.cloud.price_per_chip_hour,
+            cost_weight=self.sc.planner_cost_weight,
+        )
+
+    def _min_completion_s(self, spec: JobSpec) -> float:
+        """Best-case completion time the calibrated capacity model can
+        promise (DESIGN.md §19): home pod plus the largest legal slice
+        at the provider's K (seam included), plus one full overhead
+        chain — the feasibility bound admission renegotiation uses."""
+        planner = self._make_planner(spec)
+        t_best = planner._post_burst_step_time(
+            max(self.cloud.legal_slices), self.cloud.slowdown
+        )
+        return spec.steps_total * t_best + self.sc.overheads.total()
+
     def _arrive(self, jrt: JobController) -> None:
         spec = jrt.spec
+        if self.admission in ("renegotiate", "reject"):
+            t_min = self._min_completion_s(spec)
+            if spec.deadline_s < t_min:
+                if self.admission == "reject":
+                    # the paper's rejection case: tell the tenant the
+                    # deadline cannot be met; the job never runs and is
+                    # excluded from the hit-rate denominator
+                    jrt.rejected = True
+                    jrt.events.append((self.now, "admission_rejected", {
+                        "deadline_s": spec.deadline_s,
+                        "min_feasible_s": t_min,
+                    }))
+                    self._fleet_event("admission_rejected", {
+                        "job": spec.name, "deadline_s": spec.deadline_s,
+                        "min_feasible_s": t_min,
+                    })
+                    return
+                offer = t_min * (1.0 + self.admission_margin)
+                jrt.predictor.set_deadline(offer, at_s=self.now)
+                jrt.renegotiated = True
+                jrt.events.append((self.now, "deadline_renegotiated", {
+                    "asked_s": spec.deadline_s, "offered_s": offer,
+                    "min_feasible_s": t_min,
+                }))
         if self.scheduler is not None:
             jrt.queued = True
             self.queue.push(QueueEntry(
@@ -424,12 +536,15 @@ class FleetController:
 
     def _place(self, jrt: JobController, placement: str) -> None:
         """Start a job on its placement target — the one path by which
-        a job begins running, whether admitted immediately (legacy) or
-        from the queue by the scheduler."""
+        a job begins running, whether admitted immediately (legacy),
+        from the queue by the scheduler, or *resumed* from its newest
+        intact checkpoint generation after a preemption (§19)."""
         spec = jrt.spec
-        idx = self.jobs.index(jrt)
-        jrt.rng = np.random.default_rng([self.seed, idx])
-        jrt.spot_rng = np.random.default_rng([self.seed, idx, 1])
+        resuming = jrt.ever_placed
+        if jrt.rng is None:
+            idx = self.jobs.index(jrt)
+            jrt.rng = np.random.default_rng([self.seed, idx])
+            jrt.spot_rng = np.random.default_rng([self.seed, idx, 1])
         if placement == SITE:
             base = PodSpec(spec.onprem_chips, name=self.site.name)
             self.site.attach(spec.name, spec.onprem_chips)
@@ -451,34 +566,29 @@ class FleetController:
                 "job": spec.name, "chips": spec.onprem_chips,
             })
         jrt.res = Resources(pods=[base], shares=[1.0])
-        # per-job capacity models from the workload's own scaling law
-        # (t = W/c), cloud curve K× above — the paper's pre-processing
-        # fit, done analytically since the simulated law is known
-        cs = sorted(set(self.cloud.legal_slices)
-                    | {spec.onprem_chips})
-        w = spec.chip_seconds_per_step
-        a = spec.scaling_alpha
-        jrt.planner = BurstPlanner(
-            cluster_model=LogCapacityModel.fit(
-                cs, [w / c ** a for c in cs], name="site"),
-            cloud_model=LogCapacityModel.fit(
-                cs, [self.cloud.slowdown * w / c ** a for c in cs],
-                name="cloud"),
-            chips_cluster=spec.onprem_chips,
-            legal_slices=self.cloud.legal_slices,
-            overheads=self.sc.overheads,
-            price_per_chip_hour=self.cloud.price_per_chip_hour,
-            cost_weight=self.sc.planner_cost_weight,
-        )
-        jrt.session = self._make_session(jrt, 0, None)
+        if jrt.planner is None:
+            jrt.planner = self._make_planner(spec)
+        start, restored = self._restore_ckpt(jrt)
+        jrt.steps_done = start
+        jrt.session = self._make_session(jrt, start, restored)
+        jrt.monitor.reset_window()
         jrt.arrived = True
         jrt.queued = False
         jrt.admit_s = self.now
-        jrt.wait_s = max(self.now - spec.arrival_s, 0.0)
-        jrt.events.append((self.now, "arrival", {}))
+        if resuming:
+            jrt.events.append((self.now, "resume", {
+                "resume_step": start, "placement": placement,
+            }))
+        else:
+            jrt.wait_s = max(self.now - spec.arrival_s, 0.0)
+            jrt.events.append((self.now, "arrival", {}))
+        jrt.ever_placed = True
         if self.scheduler is not None:
             self._record_timeline()
-        self._start_step(jrt)
+        self._start_step(
+            jrt,
+            extra_delay_s=self.sc.overheads.restart_s if resuming else 0.0,
+        )
 
     # ---- admission (queued modes only) ------------------------------------
 
@@ -560,6 +670,13 @@ class FleetController:
                         placements.append((e, tgt))
                         free[tgt] -= e.chips
                         break
+            if not placements and self.preemption:
+                # last resort before blocking: checkpoint zero-weight
+                # scavengers off the site to seat the expired head (§19)
+                head = expired[0]
+                if self._preempt_for(head):
+                    placements.append((head, SITE))
+                    free[SITE] = self.site.free() - head.chips
             if not placements:
                 self._fleet_event("admission_blocked", {
                     "head": expired[0].name,
@@ -593,6 +710,75 @@ class FleetController:
                     x.name == entry.name for x in expired
                 ),
             }))
+
+    # ---- scavenger preemption (DESIGN.md §19) -----------------------------
+
+    def _preempt_for(self, entry: QueueEntry) -> bool:
+        """Checkpoint zero-weight scavengers off the site until the
+        expired weighted ``entry`` fits.  Victims leave through the
+        existing ckpt→restart path, re-queue at their current progress,
+        and resume from the newest intact generation when capacity
+        returns — the ROADMAP's preemption-through-checkpoint item."""
+        victims = sorted(
+            (
+                j for j in self.jobs
+                if j.arrived and not j.finished and j.rented_chips == 0
+                and self.queue.tenants.get(
+                    j.spec.tenant, Tenant(j.spec.tenant)
+                ).weight == 0.0
+            ),
+            key=lambda j: (-j.spec.onprem_chips, j.spec.name),
+        )
+        for v in victims:
+            if self.site.free() >= entry.chips:
+                break
+            self._preempt(v, entry.name)
+        return self.site.free() >= entry.chips
+
+    def _preempt(self, jrt: JobController, for_job: str) -> None:
+        """Take one scavenger off the site: checkpoint at the current
+        step, drop every cloud pod, release the home pod, re-queue."""
+        self._save_ckpt(jrt, jrt.steps_done,
+                        jrt.session.checkpoint(jrt.steps_done))
+        jrt.preemptions += 1
+        jrt.step_epoch += 1            # invalidate the in-flight step
+        self._bill_cloud(jrt)
+        before = jrt.cloud_chips
+        if jrt.cloud_chips > 0:
+            jrt.cloud_epoch += 1       # invalidate stale spot reclaims
+            jrt.res = ElasticOrchestrator.apply_scale(
+                jrt.res, ScaleAction("retire", reason="preempted")
+            )
+        self._release_elastic(jrt, before, 0, reclaimed=False)
+        self._return_staged_pool(jrt)
+        jrt.pending_action = None
+        jrt.pending_target = 0
+        self.site.release(jrt.spec.name)
+        # bank the served site interval now: admit_s resets on resume,
+        # so fairness accounting would otherwise lose this window
+        served = jrt.spec.onprem_chips * max(self.now - jrt.admit_s, 0.0)
+        jrt.site_banked_chip_s += served
+        self._tenant_served[jrt.spec.tenant] = (
+            self._tenant_served.get(jrt.spec.tenant, 0.0) + served
+        )
+        jrt.arrived = False
+        jrt.queued = True
+        steps_left = jrt.spec.steps_total - jrt.last_ckpt_step
+        self.queue.push(QueueEntry(
+            name=jrt.spec.name, tenant=jrt.spec.tenant,
+            chips=jrt.spec.onprem_chips,
+            work_chip_s=steps_left * jrt.spec.chip_seconds_per_step,
+            enqueued_s=self.now, priority=jrt.spec.priority,
+            preemptions=jrt.preemptions,
+        ))
+        jrt.events.append((self.now, "preempted", {
+            "for": for_job, "ckpt_step": jrt.last_ckpt_step,
+        }))
+        self._fleet_event("preempt", {
+            "victim": jrt.spec.name, "for": for_job,
+            "chips": jrt.spec.onprem_chips,
+        })
+        self._record_timeline()
 
     # ---- billing ----------------------------------------------------------
 
@@ -655,6 +841,54 @@ class FleetController:
             for p in jrt.res.pods
         ]
 
+    # ---- checkpoint generations (DESIGN.md §19) ---------------------------
+
+    def _save_ckpt(self, jrt: JobController, step: int, state) -> None:
+        """Record one checkpoint generation.  With a fault plan active
+        the write may be *silently* corrupt — nothing notices until a
+        restore verifies integrity (DESIGN.md §19).  At most
+        ``ckpt_keep`` generations are retained (never fewer than 2, so
+        one bad write can never strand the job without a fallback)."""
+        intact = True
+        if jrt.faults is not None:
+            intact = not jrt.faults.ckpt_corrupt()
+            if not intact:
+                jrt.events.append((self.now, "ckpt_corrupt", {
+                    "step": step,
+                }))
+        jrt.ckpt_gens.append((step, state, intact))
+        del jrt.ckpt_gens[:-self.ckpt_keep]
+        jrt.last_ckpt = state
+        jrt.last_ckpt_step = step
+
+    def _restore_ckpt(self, jrt: JobController) -> tuple[int, object]:
+        """Pick the checkpoint a rollback/resume restarts from.
+
+        Hardened (``ckpt_integrity`` on): verify and fall back to the
+        newest *intact* generation, paying the extra lost steps when
+        the latest write was corrupt.  Unhardened: trust the newest
+        blindly — a corrupt latest collapses the job to step 0, the
+        failure mode the integrity layer exists to prevent (§19).
+        """
+        newest = jrt.ckpt_gens[-1]
+        if self.ckpt_integrity:
+            for step, state, intact in reversed(jrt.ckpt_gens):
+                if intact:
+                    if step != newest[0]:
+                        jrt.events.append((self.now, "ckpt_fallback", {
+                            "bad_step": newest[0], "resume_step": step,
+                        }))
+                    return step, state
+            jrt.events.append((self.now, "ckpt_none_intact", {}))
+            return 0, None
+        step, state, intact = newest
+        if not intact:
+            jrt.events.append((self.now, "ckpt_restore_failed", {
+                "step": step,
+            }))
+            return 0, None
+        return step, state
+
     # ---- scale transitions ------------------------------------------------
 
     def _return_staged_pool(self, jrt: JobController) -> None:
@@ -690,8 +924,9 @@ class FleetController:
         Shares always land on *measured* throughputs (the paper's γ from
         current conditions, not nominal chip counts)."""
         ckpt = jrt.session.checkpoint(jrt.steps_done)
-        jrt.last_ckpt = ckpt
-        jrt.last_ckpt_step = jrt.steps_done
+        # the new session resumes from the in-memory state; corruption
+        # (if drawn) poisons only the *written* generation (§19)
+        self._save_ckpt(jrt, jrt.steps_done, ckpt)
         self._bill_cloud(jrt)
         before = jrt.cloud_chips
         if action.kind != "rebalance":
@@ -736,14 +971,15 @@ class FleetController:
         self._return_staged_pool(jrt)
         jrt.pending_action = None
         jrt.pending_target = 0
-        jrt.steps_done = jrt.last_ckpt_step
-        jrt.session = self._make_session(
-            jrt, jrt.last_ckpt_step, jrt.last_ckpt
-        )
+        resume_step, state = self._restore_ckpt(jrt)
+        lost = jrt.steps_done - resume_step
+        jrt.steps_done = resume_step
+        jrt.session = self._make_session(jrt, resume_step, state)
         jrt.monitor.reset_window()
         restart = self.sc.overheads.restart_s
         jrt.events.append((self.now, kind, {
             "resume_step": jrt.steps_done, "cloud_chips": jrt.cloud_chips,
+            "lost_steps": lost,
         }))
         self._record_timeline()
         self._start_step(jrt, extra_delay_s=restart)
@@ -779,7 +1015,8 @@ class FleetController:
             "elapsed_s": self.now - jrt.spec.arrival_s,
         }))
         self._record_timeline()
-        if all(j.finished for j in self.jobs) and self.pool_free > 0:
+        if all(j.finished or j.rejected for j in self.jobs) \
+                and self.pool_free > 0:
             self._bill_pool()
             self._fleet_event("pool_drain", {"chips": self.pool_free})
             self.pool_free = 0
@@ -795,8 +1032,8 @@ class FleetController:
         jrt.monitor.observe(dt)
         jrt.steps_done += 1
         if jrt.steps_done % self.sc.ckpt_every == 0:
-            jrt.last_ckpt = jrt.session.checkpoint(jrt.steps_done)
-            jrt.last_ckpt_step = jrt.steps_done
+            self._save_ckpt(jrt, jrt.steps_done,
+                            jrt.session.checkpoint(jrt.steps_done))
         if jrt.steps_done >= jrt.spec.steps_total:
             self._finish(jrt)
             return
@@ -892,6 +1129,8 @@ class FleetController:
                 monitor=jrt.monitor,
                 legal=list(self.cloud.legal_slices),
                 contention=self.site.contention(self.now),
+                provision_failures=jrt.provision_failures,
+                since_failure_s=self.now - jrt.last_failure_s,
             )
             action = jrt.policy.decide(ctx)
             wants_grow = False
@@ -936,7 +1175,7 @@ class FleetController:
             # waits, sample the demand-bounded min weighted share
             self._fairness_sum += self._fairness_snapshot()
             self._fairness_n += 1
-        if any(not j.finished for j in self.jobs):
+        if any(not (j.finished or j.rejected) for j in self.jobs):
             self._push(self.now + self.sc.eval_interval_s, "evaluate")
 
     def _arbitrate_grows(
@@ -957,8 +1196,15 @@ class FleetController:
                 self._bill_pool()
                 self.pool_free -= inc
                 self._return_staged_pool(jrt)
+                k = self.cloud.slowdown
+                if jrt.faults is not None:
+                    k = jrt.faults.straggler_k(k)
+                    if k > self.cloud.slowdown:
+                        jrt.events.append((self.now, "straggler_pod", {
+                            "chips": target, "slowdown": k,
+                        }))
                 jrt.pending_action = ScaleAction(
-                    "grow", chips=target, slowdown=self.cloud.slowdown,
+                    "grow", chips=target, slowdown=k,
                     reason=f"{reason} [pool]",
                 )
                 jrt.staged_from_pool = inc
@@ -1007,10 +1253,7 @@ class FleetController:
             if grant > max(jrt.cloud_chips, jrt.pending_target,
                            jrt.staged_grow()):
                 jrt.pending_target = grant
-                self._push(
-                    self.now + self.cloud.provision_delay_s,
-                    "provision", (jrt, grant, reason),
-                )
+                self._request_provision(jrt, grant, reason)
                 jrt.events.append((self.now, "provision_request", {
                     "chips": grant, "reason": reason,
                 }))
@@ -1020,17 +1263,69 @@ class FleetController:
                     "why": "cap headroom",
                 }))
 
+    def _request_provision(self, jrt: JobController, target: int,
+                           reason: str, attempt: int = 1) -> None:
+        """Issue one provisioning attempt.  The fault draw happens at
+        request time (DESIGN.md §19): a denial is only *discovered*
+        when the provider answers after the provisioning delay, and a
+        "timeout" stretches that delay by ``provision_timeout_x``."""
+        denied, delay_x = (False, 1.0)
+        if jrt.faults is not None:
+            denied, delay_x = jrt.faults.provision_outcome()
+            if delay_x > 1.0:
+                jrt.events.append((self.now, "provision_timeout", {
+                    "chips": target, "attempt": attempt,
+                    "delay_x": delay_x,
+                }))
+        self._push(
+            self.now + self.cloud.provision_delay_s * delay_x,
+            "provision", (jrt, target, reason, attempt, denied),
+        )
+
     def _on_provision(self, jrt: JobController, target: int,
-                      reason: str) -> None:
+                      reason: str, attempt: int = 1,
+                      denied: bool = False) -> None:
         if jrt.finished or jrt.pending_target != target:
             return                     # superseded or moot
+        if denied:
+            jrt.retries += 1
+            jrt.provision_failures += 1
+            jrt.last_failure_s = self.now
+            jrt.events.append((self.now, "provision_denied", {
+                "chips": target, "attempt": attempt,
+            }))
+            if (self.retry is not None
+                    and attempt <= self.retry.max_retries):
+                # capped exponential backoff, jitter from the job's own
+                # fault stream — bit-deterministic per seed (§19)
+                backoff = self.retry.backoff_s(attempt, jrt.faults.rng)
+                jrt.events.append((self.now, "provision_retry", {
+                    "attempt": attempt + 1, "backoff_s": backoff,
+                }))
+                self._push(self.now + backoff, "provision_retry",
+                           (jrt, target, reason, attempt + 1))
+            else:
+                jrt.gave_up = True
+                jrt.pending_target = 0
+                jrt.events.append((self.now, "provision_gave_up", {
+                    "chips": target, "attempts": attempt,
+                }))
+            return
         jrt.pending_target = 0
+        jrt.provision_failures = 0
         self._return_staged_pool(jrt)
         # the pod's *true* K is the provider's, whatever the policy
         # believed when sizing — the sim-vs-real boundary (DESIGN.md §10)
+        # ... unless the straggler draw hits and it lands degraded (§19)
+        k = self.cloud.slowdown
+        if jrt.faults is not None:
+            k = jrt.faults.straggler_k(k)
+            if k > self.cloud.slowdown:
+                jrt.events.append((self.now, "straggler_pod", {
+                    "chips": target, "slowdown": k,
+                }))
         jrt.pending_action = ScaleAction(
-            "grow", chips=target, slowdown=self.cloud.slowdown,
-            reason=reason,
+            "grow", chips=target, slowdown=k, reason=reason,
         )
 
     def _on_pool_online(self, chips: int) -> None:
@@ -1040,6 +1335,27 @@ class FleetController:
         self._fleet_event("pool_online", {"chips": chips})
         self._record_timeline()
         self._admit_pass()
+
+    def _on_storm(self, p: float) -> None:
+        """Correlated reclaim storm (DESIGN.md §19): at one instant the
+        provider reclaims elastic capacity market-wide — every job
+        holding elastic chips is hit independently with probability
+        ``p`` (from its own fault stream), and the idle pool is
+        reclaimed with the same probability from the fleet stream."""
+        self._fleet_event("reclaim_storm", {"p": p})
+        if self.pool_free > 0 \
+                and float(self._storm_rng.uniform()) < p:
+            self._bill_pool()
+            self._fleet_event("pool_reclaimed", {
+                "chips": self.pool_free,
+            })
+            self.pool_free = 0
+            self._record_timeline()
+        for jrt in self.jobs:
+            if (jrt.arrived and not jrt.finished
+                    and jrt.cloud_chips > 0
+                    and jrt.faults.storm_hit(p)):
+                self._rollback(jrt, "spot_reclaim", drop_cloud=True)
 
     # ---- run --------------------------------------------------------------
 
@@ -1053,6 +1369,9 @@ class FleetController:
             self._push(t, "deadline", (name, new_deadline))
         for t, name in self.sc.failures:
             self._push(t, "fail", (name,))
+        if self.faults is not None:
+            for t, p in self.faults.reclaim_storms:
+                self._push(t, "storm", (p,))
         first = min(
             (j.spec.arrival_s for j in self.jobs), default=0.0
         )
@@ -1076,8 +1395,14 @@ class FleetController:
                 self._on_evaluate()
             elif kind == "provision":
                 self._on_provision(*payload)
+            elif kind == "provision_retry":
+                jrt, target, reason, attempt = payload
+                if not jrt.finished and jrt.pending_target == target:
+                    self._request_provision(jrt, target, reason, attempt)
             elif kind == "pool_online":
                 self._on_pool_online(*payload)
+            elif kind == "storm":
+                self._on_storm(*payload)
             elif kind == "reclaim":
                 jrt, epoch = payload
                 if (not jrt.finished and epoch == jrt.cloud_epoch
@@ -1089,7 +1414,8 @@ class FleetController:
                     self._rollback(jrt, "node_failure", drop_cloud=False)
             elif kind == "deadline":
                 jrt = self._by_name(payload[0])
-                if jrt is not None and not jrt.finished:
+                if jrt is not None and not jrt.finished \
+                        and not jrt.rejected:
                     jrt.predictor.set_deadline(payload[1], at_s=self.now)
                     jrt.events.append((self.now, "deadline_change", {
                         "new_deadline_s": payload[1],
@@ -1142,6 +1468,9 @@ class FleetController:
                 overhead_s=jrt.overhead_s, rollbacks=jrt.rollbacks,
                 events=jrt.events, tenant=jrt.spec.tenant,
                 state=jrt.state, wait_s=wait,
+                retries=jrt.retries, gave_up=jrt.gave_up,
+                preemptions=jrt.preemptions,
+                renegotiated=jrt.renegotiated,
             ))
             # useful chip·s per step at the on-premise operating point
             # of the job's rate law (== chip_seconds_per_step at α = 1)
@@ -1154,7 +1483,13 @@ class FleetController:
                 consumed += jrt.spec.onprem_chips * max(
                     run_end - jrt.admit_s, 0.0
                 ) + cloud_s
-        done = [j for j in jobs]
+            elif jrt.preemptions > 0:
+                # preempted and still queued: its cloud time was real
+                consumed += cloud_s
+            consumed += jrt.site_banked_chip_s
+        # rejected jobs never ran: the admission control *said no*, so
+        # they are excluded from the hit-rate denominator (§19)
+        done = [j for j in jobs if j.state != "rejected"]
         pool_s = self.pool_chip_s
         if self.pool_free > 0:
             pool_s += self.pool_free * (self.now - self.pool_since)

@@ -60,6 +60,7 @@ class QueueEntry:
     enqueued_s: float
     priority: float = 0.0          # per-job boost on top of the tenant's
     skips: int = 0                 # admission passes that overtook it
+    preemptions: int = 0           # times checkpointed off the site (§19)
 
     def wait_s(self, now: float) -> float:
         return max(now - self.enqueued_s, 0.0)

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core import OverheadModel
 from repro.core.events import BackgroundLoad
+from repro.sim.faults import FaultPlan, RetryPolicy
 from repro.sim.fleet import CloudProvider, JobSpec
 from repro.sim.queue import Tenant
 
@@ -55,12 +56,14 @@ __all__ = [
     "default_scenarios",
     "diurnal_jobs",
     "diurnal_stream",
+    "fault_storm",
     "multi_tenant_rush",
     "node_failures",
     "overheads_from_probe",
     "overload_ramp",
     "poisson_background",
     "poisson_jobs",
+    "preemption_pressure",
     "queued_scenarios",
     "shot_batch_model_from_probe",
     "spot_market",
@@ -194,6 +197,27 @@ class Scenario:
     #: starvation guard: a weighted tenant waiting longer than this
     #: blocks all admissions that would overtake it
     starve_patience_s: float = 900.0
+    # ---- fault layer (DESIGN.md §19); defaults keep every existing
+    # ---- scenario bit-identical (no fault draws are ever taken)
+    #: seeded fault mix injected into the run; None = fault-free
+    faults: FaultPlan | None = None
+    #: provisioning retry/backoff; None = give up on first denial
+    retry: RetryPolicy | None = None
+    #: hardened rollback: verify checkpoint generations and fall back
+    #: to the newest intact one.  False trusts the latest blindly — a
+    #: corrupt restore collapses the job back to step 0
+    ckpt_integrity: bool = True
+    #: checkpoint generations each job keeps (floored to 2)
+    ckpt_keep: int = 3
+    #: scavenger preemption: checkpoint a running zero-weight job
+    #: through the ckpt→restart path to admit an expired weighted one
+    preemption: bool = False
+    #: admission-time deadline handling for infeasible deadlines:
+    #: "accept" (run anyway), "renegotiate" (counter-offer the
+    #: capacity-model minimum), "reject" (decline the job)
+    admission: str = "accept"
+    #: safety margin on the renegotiated counter-offer deadline
+    admission_margin: float = 0.1
 
 
 def _jobs(n: int, *, steps: int, deadline_s: float,
@@ -346,6 +370,76 @@ def superlinear_cache(seed: int = 0,
         description="sustained overload on a superlinearly-scaling "
                     "workload — cost-aware sizing should buy the same "
                     "hit-rate for fewer cloud $",
+    )
+
+
+def fault_storm(seed: int = 0, *, hardened: bool = True) -> Scenario:
+    """Overload under an adversarial fault mix (DESIGN.md §19): the
+    ``overload_ramp`` world where bursting is *required* to hit the
+    deadline, plus provisioning denials/timeouts, two market-wide
+    reclaim storms, frequent silent checkpoint corruption, and
+    straggler pods.  ``hardened=True`` arms the robustness machinery
+    (retry/backoff + checkpoint-integrity fallback); ``hardened=False``
+    is the unhardened baseline — one provisioning denial gives up, and
+    a corrupt latest checkpoint is trusted blindly, collapsing the
+    rollback to step 0.  The fault draws themselves are identical in
+    both variants (same FaultPlan, same seeds)."""
+    plan = FaultPlan(
+        provision_fail_p=0.35,
+        provision_timeout_p=0.25,
+        provision_timeout_x=3.0,
+        # one market-wide crunch late in the run: every elastic pod is
+        # reclaimed when a full restart can no longer make the deadline
+        # but a newest-intact-generation fallback still can
+        reclaim_storms=((1450.0, 1.0),),
+        ckpt_corrupt_p=0.6,
+        straggler_p=0.1,
+        straggler_x=2.0,
+    )
+    return Scenario(
+        name="fault_storm",
+        jobs=_jobs(2, steps=200, deadline_s=2200.0),
+        background=(
+            BackgroundLoad(300.0, 10.0 ** 9, 128, name="ramp1"),
+            BackgroundLoad(500.0, 10.0 ** 9, 256, name="ramp2"),
+        ),
+        ckpt_every=20,
+        ckpt_keep=4,
+        faults=plan,
+        retry=RetryPolicy(max_retries=4, base_s=10.0, mult=2.0,
+                          cap_s=120.0) if hardened else None,
+        ckpt_integrity=hardened,
+        description="overload_ramp under provisioning denials, reclaim "
+                    "storms, checkpoint corruption and stragglers — "
+                    "the hardened loop keeps its hit-rate where the "
+                    "unhardened baseline collapses",
+    )
+
+
+def preemption_pressure(seed: int = 0) -> Scenario:
+    """A scavenger monopolizes the site when a weighted job arrives:
+    with ``preemption=True`` the starvation guard checkpoints the
+    zero-weight job through the ckpt→restart path and admits the
+    expired weighted entry within one evaluation interval
+    (DESIGN.md §19)."""
+    work = 8.0 * 128
+    return Scenario(
+        name="preemption_pressure",
+        jobs=(
+            JobSpec(name="scav0", arrival_s=0.0, steps_total=400,
+                    deadline_s=10.0 ** 6, chip_seconds_per_step=work,
+                    onprem_chips=128, tenant="scav"),
+            JobSpec(name="gold0", arrival_s=60.0, steps_total=60,
+                    deadline_s=1500.0, chip_seconds_per_step=work,
+                    onprem_chips=128, tenant="gold"),
+        ),
+        site_chips=128,
+        scheduler="fill",
+        tenants=(Tenant("gold", weight=2.0), Tenant("scav", weight=0.0)),
+        starve_patience_s=180.0,
+        preemption=True,
+        description="a long scavenger holds the whole site; the "
+                    "starved weighted job is admitted by preempting it",
     )
 
 
